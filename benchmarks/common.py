@@ -1,0 +1,35 @@
+"""Shared helpers for the benchmark suite."""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import time
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts"
+ART.mkdir(exist_ok=True)
+
+#: Paper methodology: 1000 Monte-Carlo runs. Override for quick iterations:
+#: REPRO_BENCH_RUNS=100 python -m benchmarks.run
+N_RUNS = int(os.environ.get("REPRO_BENCH_RUNS", "1000"))
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    """Wall-time fn (already-jitted callables): returns (result, us_per_call)."""
+    import jax
+
+    result = None
+    for _ in range(warmup):
+        result = fn(*args)
+        jax.block_until_ready(result)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        result = fn(*args)
+        jax.block_until_ready(result)
+    dt = (time.perf_counter() - t0) / iters
+    return result, dt * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """The run.py output contract: ``name,us_per_call,derived`` CSV."""
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

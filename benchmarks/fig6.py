@@ -1,0 +1,106 @@
+"""Paper Fig. 6 — sensitivity to the control parameter V (0.001 … 100).
+
+(a) time-average energy cost vs V — GMSA decreases monotonically toward the
+    optimum, baselines flat ≈$750; best-case reduction ≈30%;
+(b) time-average backlog vs V — grows with V (the O(1/V)/O(V) trade-off);
+    our calibration crosses the baselines' 24h averages at V ≈ O(100)
+    (paper: ≈10; noted in EXPERIMENTS.md §Calibration).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import ART, N_RUNS, emit
+from repro.configs.facebook_4dc import PaperSimConfig, make_sim_builder
+from repro.core.baselines import data_dispatch, greedy_cost_dispatch, random_dispatch
+from repro.core.gmsa import gmsa_policy
+from repro.core.simulator import simulate_many
+
+#: Paper grid (0.001…100) + one extra decade to exhibit the backlog
+#: crossing of Fig. 6(b) under our calibration (EXPERIMENTS.md §Calibration).
+V_GRID = (0.001, 0.01, 0.1, 1.0, 10.0, 100.0, 1000.0)
+
+
+def run(n_runs: int = N_RUNS) -> dict:
+    cfg = PaperSimConfig()
+    _, build = make_sim_builder(cfg)
+    key = jax.random.key(43)
+
+    t0 = time.perf_counter()
+    rows = {}
+    for v in V_GRID:
+        # V is a *traced* scalar (repro.core.gmsa.gmsa_policy): the whole
+        # sweep shares one compiled simulation (§Perf wall-clock track).
+        outs = simulate_many(build, gmsa_policy, key, n_runs, scalar=v)
+        rows[v] = {
+            "cost": float(outs.cost.mean()),
+            "backlog": float(outs.backlog_avg.mean()),
+        }
+    base = {}
+    for name, pol in [("DATA", data_dispatch), ("RANDOM", random_dispatch),
+                      ("GREEDY", greedy_cost_dispatch)]:
+        outs = simulate_many(build, pol, key, n_runs)
+        base[name] = {
+            "cost": float(outs.cost.mean()),
+            "backlog": float(outs.backlog_avg.mean()),
+        }
+    total_us = (time.perf_counter() - t0) * 1e6
+
+    costs = [rows[v]["cost"] for v in V_GRID]
+    backlogs = [rows[v]["backlog"] for v in V_GRID]
+    baseline_cost = 0.5 * (base["DATA"]["cost"] + base["RANDOM"]["cost"])
+    baseline_backlog = min(base["DATA"]["backlog"], base["RANDOM"]["backlog"])
+    # paper reports its headline reduction at the top of its grid (V=100)
+    reduction = 1.0 - rows[100.0]["cost"] / baseline_cost
+    crossing_v = next(
+        (v for v in V_GRID if rows[v]["backlog"] > baseline_backlog), None
+    )
+
+    out = {
+        "n_runs": n_runs,
+        "v_grid": list(V_GRID),
+        "gmsa": rows,
+        "baselines": base,
+        "checks": {
+            "cost_monotone_nonincreasing": bool(
+                all(costs[i + 1] <= costs[i] * 1.01 for i in range(len(costs) - 1))
+            ),
+            "backlog_monotone_nondecreasing": bool(
+                all(backlogs[i + 1] >= backlogs[i] * 0.99 for i in range(len(backlogs) - 1))
+            ),
+            "baseline_cost": baseline_cost,
+            "best_gmsa_cost": min(costs),
+            "reduction_at_v100": reduction,
+            "greedy_floor_cost": base["GREEDY"]["cost"],
+            "backlog_crossing_v": crossing_v,
+        },
+        "total_us": total_us,
+    }
+    (ART / "fig6.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+def main():
+    out = run()
+    c = out["checks"]
+    emit("fig6a_cost_vs_V", out["total_us"] / (len(V_GRID) + 3),
+         f"baseline={c['baseline_cost']:.0f};best={c['best_gmsa_cost']:.0f};"
+         f"reduction={100*c['reduction_at_v100']:.1f}%")
+    emit("fig6b_backlog_vs_V", out["total_us"] / (len(V_GRID) + 3),
+         f"monotone_cost={c['cost_monotone_nonincreasing']};"
+         f"monotone_backlog={c['backlog_monotone_nondecreasing']};"
+         f"crosses_baselines_at_V={c['backlog_crossing_v']}")
+    assert c["cost_monotone_nonincreasing"], "Fig6a: cost must fall with V"
+    assert c["backlog_monotone_nondecreasing"], "Fig6b: backlog must rise with V"
+    assert 0.2 <= c["reduction_at_v100"] <= 0.45, (
+        f"paper claims ~30% reduction; got {100*c['reduction_at_v100']:.1f}%"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Kernel-layer microbenchmarks.
+
+Wall-clock on this container measures the pure-JAX (XLA:CPU) paths — the
+TPU Pallas kernels are the *target* (validated in interpret mode, timed
+meaningfully only on hardware). Reported here:
+
+  * gmsa dispatch (jnp path) at fleet scales (N pods × K classes) — the
+    per-slot control-plane latency budget;
+  * ssd chunked scan (jnp path) at mamba2-2.7b layer geometry;
+  * per-shape interpret-mode *correctness* spot checks for both kernels
+    (already swept in tests; repeated here so the bench run self-validates).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels.gmsa_score.ref import gmsa_score_ref
+from repro.kernels.gmsa_score.ops import gmsa_score
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.models.ssm import ssd_chunked
+
+
+def bench_gmsa_dispatch():
+    for (k, n) in [(1, 4), (16, 64), (128, 1024)]:
+        key = jax.random.key(0)
+        ks = jax.random.split(key, 6)
+        q = jax.random.uniform(ks[0], (k, n)) * 100
+        mu = jax.random.uniform(ks[1], (k, n)) * 50
+        a = jax.random.uniform(ks[2], (k,)) * 40
+        vp = jax.random.uniform(ks[3], (k,)) * 10
+        # normalized uniforms, not dirichlet: gamma rejection sampling for
+        # (128, 1024, 1024) takes minutes on one CPU core
+        raw = jax.random.uniform(ks[4], (k, n, n)) + 1e-3
+        r = raw / raw.sum(-1, keepdims=True)
+        wpue = jax.random.uniform(ks[5], (n,)) * 20
+        fn = jax.jit(gmsa_score_ref)
+        (_, best), us = timed(fn, q, mu, a, vp, r, wpue)
+        emit(f"gmsa_dispatch_jnp_K{k}_N{n}", us,
+             f"r_tensor_mb={r.size*4/1e6:.1f}")
+        # interpret-mode kernel spot check (small scales only: interpret
+        # executes each grid cell in Python — fleet scale is covered by the
+        # tiled test sweep in tests/test_kernels.py)
+        if k * n <= 16 * 64:
+            s_ref, b_ref = gmsa_score_ref(q, mu, a, vp, r, wpue)
+            _, b_k = gmsa_score(q, mu, a, vp, r, wpue, interpret=True)
+            assert np.array_equal(np.asarray(b_k), np.asarray(b_ref))
+
+
+def bench_ssd():
+    b, s, h, p, n = 1, 2048, 80, 64, 128   # mamba2-2.7b layer geometry
+    key = jax.random.key(1)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, s, n))
+    cm = jax.random.normal(ks[4], (b, s, n))
+    fn = jax.jit(lambda *args: ssd_chunked(*args, 256))
+    _, us = timed(fn, x, dt, a, bm, cm)
+    flops = 2 * b * s * h * (256 * p + 2 * p * n)  # per-token chunk matmuls (approx)
+    emit("ssd_chunked_jnp_mamba2_layer_S2048", us, f"approx_gflop={flops/1e9:.1f}")
+    # interpret spot check at reduced shape
+    xs, dts, bms, cms = x[:, :256, :2], dt[:, :256, :2], bm[:, :256], cm[:, :256]
+    y_k, h_k = ssd_scan(xs, dts, a[:2], bms, cms, chunk=64, interpret=True)
+    y_r, h_r = ssd_scan_ref(xs, dts, a[:2], bms, cms)
+    np.testing.assert_allclose(y_k, y_r, rtol=3e-4, atol=3e-4)
+
+
+def main():
+    bench_gmsa_dispatch()
+    bench_ssd()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Aggregate the dry-run artifacts into the §Roofline table.
+
+Reads benchmarks/artifacts/dryrun/*__<variant>.json, emits
+  * benchmarks/artifacts/roofline_<variant>.csv
+  * benchmarks/artifacts/roofline_<variant>.md   (the EXPERIMENTS.md table)
+and prints one summary line per (arch × shape × mesh).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import ART, emit
+
+DRY = ART / "dryrun"
+
+
+def load(variant: str = "baseline") -> list[dict]:
+    rows = []
+    for p in sorted(DRY.glob(f"*__{variant}.json")):
+        rec = json.loads(p.read_text())
+        rows.append(rec)
+    return rows
+
+
+def fmt_row(r: dict) -> dict:
+    if "skipped" in r:
+        return {
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": f"skipped: {r['skipped']}",
+        }
+    rl = r["roofline"]
+    hbm_gb = (r["memory"]["argument_bytes"] or 0) / 1e9
+    frac = rl["roofline_fraction"] or 0.0
+    useful = rl["useful_flops_ratio"] or 0.0
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+        "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+        "roofline_fraction": frac,
+        "useful_flops_ratio": useful,
+        # MFU proxy: useful model FLOPs / (chips × peak × step_time).
+        # Separates "runs at peak on redundant work" (replicated attention)
+        # from genuine utilization.
+        "mfu_proxy": frac * useful,
+        "args_gb_per_dev": hbm_gb,
+        "peak_gb_per_dev": (r["memory"]["peak_bytes"] or 0) / 1e9,
+        "status": "ok",
+    }
+
+
+def main(variant: str = "baseline"):
+    rows = [fmt_row(r) for r in load(variant)]
+    ok = [r for r in rows if r["status"] == "ok"]
+
+    csv_path = ART / f"roofline_{variant}.csv"
+    md_path = ART / f"roofline_{variant}.md"
+    cols = ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+            "dominant", "roofline_fraction", "useful_flops_ratio", "mfu_proxy",
+            "args_gb_per_dev", "peak_gb_per_dev"]
+    with open(csv_path, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in ok:
+            f.write(",".join(
+                f"{r[c]:.4e}" if isinstance(r[c], float) else str(r[c]) for c in cols
+            ) + "\n")
+    with open(md_path, "w") as f:
+        f.write("| " + " | ".join(cols) + " |\n")
+        f.write("|" + "---|" * len(cols) + "\n")
+        for r in rows:
+            if r["status"] != "ok":
+                f.write(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        + " | ".join(["—"] * (len(cols) - 4))
+                        + f" | {r['status']} |\n")
+                continue
+            f.write("| " + " | ".join(
+                f"{r[c]:.3e}" if isinstance(r[c], float) else str(r[c]) for c in cols
+            ) + " |\n")
+
+    worst = min(ok, key=lambda r: r["roofline_fraction"] or 1.0)
+    most_coll = max(ok, key=lambda r: r["collective_s"] / max(r["compute_s"], 1e-12))
+    emit(f"roofline_table_{variant}", 0.0,
+         f"cells={len(ok)};worst_fraction={worst['arch']}×{worst['shape']}"
+         f"={worst['roofline_fraction']:.3f};"
+         f"most_collective={most_coll['arch']}×{most_coll['shape']}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "baseline")

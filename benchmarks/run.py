@@ -1,0 +1,36 @@
+"""Benchmark orchestrator — one section per paper table/figure + systems
+benches. Prints ``name,us_per_call,derived`` CSV lines (stdout contract).
+
+  PYTHONPATH=src python -m benchmarks.run            # full (1000 runs)
+  REPRO_BENCH_RUNS=100 PYTHONPATH=src python -m benchmarks.run   # quick
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    failures = []
+    print("name,us_per_call,derived")
+    for name, modpath in [
+        ("fig5", "benchmarks.fig5"),
+        ("fig6", "benchmarks.fig6"),
+        ("sim_bench", "benchmarks.sim_bench"),
+        ("kernel_bench", "benchmarks.kernel_bench"),
+        ("roofline", "benchmarks.roofline"),
+    ]:
+        try:
+            mod = __import__(modpath, fromlist=["main"])
+            mod.main()
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            print(f"{name},-1,FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

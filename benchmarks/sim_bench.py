@@ -1,0 +1,84 @@
+"""GMSA simulator throughput — the wall-clock §Perf hillclimb target.
+
+Reports µs per simulated run (288 slots) under the paper's configuration for
+(a) the paper-faithful jitted lax.scan engine vmapped over Monte-Carlo runs
+(b) a naive per-slot Python loop (the "paper-faithful unoptimized" baseline)
+so the optimization path is measurable on this CPU (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.facebook_4dc import PaperSimConfig, make_sim_builder
+from repro.core.energy import manager_energy_cost
+from repro.core.gmsa import dispatch_fn, gmsa_dispatch
+from repro.core.queues import queue_step
+from repro.core.simulator import simulate, simulate_many
+
+
+def python_loop_reference(inputs, v: float) -> tuple[float, float]:
+    """Paper-faithful unvectorized engine: per-slot Python, per-DC numpy."""
+    t_slots, k_types = inputs.arrivals.shape
+    n = inputs.mu.shape[1]
+    q = np.zeros((n, k_types), np.float32)
+    arr = np.asarray(inputs.arrivals)
+    mu = np.asarray(inputs.mu)
+    omega = np.asarray(inputs.omega)
+    pue = np.asarray(inputs.pue)
+    r = np.asarray(inputs.r)
+    p = np.asarray(inputs.p_it)
+    total_cost = 0.0
+    for t in range(t_slots):
+        wpue = omega[t] * pue[t]
+        e = (r @ wpue) * p[:, None]                      # (K, N)
+        score = arr[t][:, None] * ((q - mu[t]).T + v * e)
+        best = score.argmin(axis=1)
+        f = np.zeros((n, k_types), np.float32)
+        f[best, np.arange(k_types)] = 1.0
+        total_cost += float((f * arr[t][None, :]).T.flatten() @ e.flatten())
+        q = np.maximum(q + f * arr[t][None, :] - mu[t], 0.0)
+    return total_cost / t_slots, float(q.sum())
+
+
+def main():
+    cfg = PaperSimConfig()
+    template, build = make_sim_builder(cfg)
+
+    # (a) naive python loop (1 run)
+    t0 = time.perf_counter()
+    cost_py, _ = python_loop_reference(template, 1.0)
+    us_py = (time.perf_counter() - t0) * 1e6
+    emit("sim_python_loop_1run", us_py, f"avg_cost={cost_py:.1f}")
+
+    # (b) jitted scan, single run
+    pol = dispatch_fn(1.0)
+    key = jax.random.key(0)
+    outs = simulate(template, pol, key)          # compile
+    jax.block_until_ready(outs.cost)
+    t0 = time.perf_counter()
+    for _ in range(10):
+        outs = simulate(template, pol, key)
+        jax.block_until_ready(outs.cost)
+    us_scan = (time.perf_counter() - t0) * 1e6 / 10
+    emit("sim_jit_scan_1run", us_scan, f"speedup_vs_python={us_py/us_scan:.1f}x")
+
+    # (c) vmapped Monte-Carlo engine (the production path), per-run cost
+    for n_runs in (100, 1000):
+        outs = simulate_many(build, pol, key, n_runs)   # compile
+        jax.block_until_ready(outs.cost)
+        t0 = time.perf_counter()
+        outs = simulate_many(build, pol, key, n_runs)
+        jax.block_until_ready(outs.cost)
+        us = (time.perf_counter() - t0) * 1e6 / n_runs
+        emit(f"sim_vmap_{n_runs}runs_per_run", us,
+             f"runs_per_sec={1e6/us:.0f}")
+
+
+if __name__ == "__main__":
+    main()

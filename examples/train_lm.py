@@ -1,0 +1,35 @@
+"""End-to-end training driver with fault tolerance.
+
+Trains a ~1M-param qwen2-family model for 300 steps on the synthetic token
+pipeline, checkpoints every 60 steps, injects a failure at step 150, and
+shows the run resume bit-identically — the checkpoint/restart path a real
+fleet uses, in miniature.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+
+import shutil
+import tempfile
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ckpt = tempfile.mkdtemp(prefix="repro_train_")
+    try:
+        print("=== train 300 steps, checkpoint every 60, failure injected @150 ===")
+        first, last = train_main([
+            "--arch", "qwen2-0.5b", "--variant", "smoke",
+            "--steps", "300", "--batch", "8", "--seq", "128",
+            "--ckpt-dir", ckpt, "--ckpt-every", "60",
+            "--fail-at", "150", "--log-every", "50",
+        ])
+        assert last < first - 1.0, "model failed to learn"
+        print(f"\nlearned bigram structure through a mid-run failure: "
+              f"loss {first:.2f} -> {last:.2f}")
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

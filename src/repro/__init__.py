@@ -1,0 +1,24 @@
+"""repro — Energy-efficient analytics for geographically distributed big data (GMSA).
+
+A production-oriented, multi-pod JAX framework implementing the paper's
+dynamic Global Manager Selection Algorithm (GMSA, Lyapunov drift-plus-penalty
+dispatch) as a first-class scheduling layer for geo-distributed TPU fleets,
+together with the full substrate it needs: trace pipelines, a model zoo
+(dense / MoE / SSM / hybrid / encoder / VLM backbones), pjit/shard_map
+distribution, training + serving runtimes, checkpointing and fault
+tolerance, and Pallas TPU kernels for the dispatch and SSD hot spots.
+
+Layout:
+    repro.core         — the paper's contribution (queues, energy, GMSA, Iridium)
+    repro.traces       — arrival/price/PUE/bandwidth/token pipelines
+    repro.models       — architecture zoo
+    repro.distributed  — sharding rules, collectives, compression
+    repro.train        — optimizer, train_step, loop
+    repro.serve        — KV/state caches, prefill/decode, batching engine
+    repro.checkpoint   — atomic sharded checkpoints, fault handling
+    repro.kernels      — Pallas TPU kernels (+ pure-jnp oracles)
+    repro.configs      — architecture & experiment configs (registry)
+    repro.launch       — mesh, dry-run, train/serve entry points
+"""
+
+__version__ = "1.0.0"

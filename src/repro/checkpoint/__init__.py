@@ -1,0 +1,19 @@
+"""repro.checkpoint — atomic sharded checkpoints + fault tolerance."""
+
+from repro.checkpoint.checkpoint import CheckpointManager, save_tree, restore_tree
+from repro.checkpoint.fault import (
+    SimulatedFailure,
+    FailureInjector,
+    run_with_restarts,
+    drop_site,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "save_tree",
+    "restore_tree",
+    "SimulatedFailure",
+    "FailureInjector",
+    "run_with_restarts",
+    "drop_site",
+]

@@ -1,0 +1,124 @@
+"""Fault tolerance: failure injection, restart orchestration, elastic re-mesh.
+
+Three layers (DESIGN.md §5):
+
+* **checkpoint/restart** — ``run_with_restarts`` drives a step function,
+  checkpointing on the manager's schedule and replaying from the last
+  checkpoint after a (simulated or real) failure. The data pipeline is
+  seeded-by-step (repro.traces.tokens), so replayed batches are identical —
+  a restarted run is bit-reproducible (asserted in tests/test_checkpoint.py).
+* **straggler mitigation** — GMSA itself: a slow pod's queue grows, the
+  drift term shifts dispatch away (the paper's mechanism *is* the
+  mitigation). ``FleetEngine`` models stragglers as service-rate noise.
+* **elastic re-mesh** — ``drop_site`` shrinks the control-plane state when a
+  pod is lost: its queue backlog is re-injected as an arrival burst and the
+  task-allocation ratios / dataset distribution are renormalized over the
+  survivors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import CheckpointManager
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by FailureInjector to model a node/pod loss."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministically fail at given steps (or by seeded coin-flip)."""
+
+    fail_at_steps: tuple[int, ...] = ()
+    probability: float = 0.0
+    seed: int = 0
+    _fired: set = dataclasses.field(default_factory=set)
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at_steps and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+        if self.probability > 0:
+            rng = np.random.default_rng((self.seed, step))
+            if rng.random() < self.probability and step not in self._fired:
+                self._fired.add(step)
+                raise SimulatedFailure(f"random failure at step {step}")
+
+
+def run_with_restarts(
+    init_state: Callable[[], dict],
+    step_fn: Callable[[dict, int], dict],
+    manager: CheckpointManager,
+    total_steps: int,
+    injector: FailureInjector | None = None,
+    max_restarts: int = 10,
+) -> tuple[dict, dict]:
+    """Drive ``step_fn`` with checkpoint/restart.
+
+    ``state`` is any pytree dict; ``step_fn(state, step) -> state``.
+    Returns (final_state, stats) where stats counts restarts/replays.
+    """
+    stats = {"restarts": 0, "replayed_steps": 0, "checkpoints": 0}
+    state = init_state()
+    start = 0
+    if manager.latest_step() is not None:
+        state, _, start = manager.restore(state)
+    step = start
+    while step < total_steps:
+        try:
+            if injector is not None:
+                injector.maybe_fail(step)
+            state = step_fn(state, step)
+            step += 1
+            if manager.should_save(step):
+                # async: disk I/O overlaps the next steps; restore()/wait()
+                # join the in-flight write before any read.
+                manager.save_async(step, state, {"step": step})
+                stats["checkpoints"] += 1
+        except SimulatedFailure:
+            stats["restarts"] += 1
+            if stats["restarts"] > max_restarts:
+                raise
+            manager.wait()   # join any in-flight async write before listing
+            latest = manager.latest_step()
+            if latest is None:
+                stats["replayed_steps"] += step   # cold restart: all lost
+                state, step = init_state(), 0
+            else:
+                state, _, ckpt_step = manager.restore(state)
+                stats["replayed_steps"] += step - ckpt_step
+                step = ckpt_step
+    manager.wait()
+    return state, stats
+
+
+def drop_site(q, r, data_dist, dead: int):
+    """Elastic shrink of the GDA control plane when DC/pod ``dead`` is lost.
+
+    Returns (q', r', data_dist', burst) over the surviving N-1 sites:
+      * q'          — backlogs with the dead row removed;
+      * burst       — the dead site's backlog (K,), to be re-injected as
+                      arrivals (those jobs must be re-dispatched);
+      * r'          — ratios with dead row/column removed, renormalized;
+      * data_dist'  — dataset distribution renormalized (the dead site's
+                      replica share redistributes proportionally).
+    """
+    q = jnp.asarray(q)
+    r = jnp.asarray(r)
+    data_dist = jnp.asarray(data_dist)
+    n = q.shape[0]
+    keep = jnp.asarray([i for i in range(n) if i != dead])
+
+    burst = q[dead]
+    q2 = q[keep]
+    r2 = r[:, keep][:, :, keep]
+    r2 = r2 / jnp.maximum(r2.sum(-1, keepdims=True), 1e-9)
+    d2 = data_dist[:, keep]
+    d2 = d2 / jnp.maximum(d2.sum(-1, keepdims=True), 1e-9)
+    return q2, r2, d2, burst

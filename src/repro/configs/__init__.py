@@ -1,0 +1,44 @@
+"""repro.configs — architecture & experiment configuration registry.
+
+Every assigned architecture has one module here defining its exact published
+configuration plus a reduced smoke-test variant, self-registering under its
+``--arch`` id. ``repro.configs.registry`` resolves ids; ``repro.configs.base``
+holds the shared dataclasses; ``repro.configs.facebook_4dc`` is the paper's
+own simulation setup (Sec. V-A).
+"""
+
+from repro.configs.base import (
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    shape_applicable,
+    applicable_shapes,
+)
+from repro.configs.registry import register_arch, get_arch, list_archs
+
+# Self-registering architecture modules (import order = registry order).
+from repro.configs import (  # noqa: F401
+    phi35_moe,
+    deepseek_moe_16b,
+    granite_3_2b,
+    stablelm_12b,
+    phi4_mini,
+    qwen2_0_5b,
+    hymba_1_5b,
+    internvl2_76b,
+    mamba2_2_7b,
+    hubert_xlarge,
+)
+from repro.configs.facebook_4dc import PaperSimConfig
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "shape_applicable",
+    "applicable_shapes",
+    "register_arch",
+    "get_arch",
+    "list_archs",
+    "PaperSimConfig",
+]

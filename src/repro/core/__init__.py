@@ -1,0 +1,69 @@
+"""repro.core — the paper's primary contribution.
+
+Implements the GDA (geo-distributed analytics) control plane of
+"Energy-efficient Analytics for Geographically Distributed Big Data":
+
+* :mod:`repro.core.queues`    — the per-DC/per-type queueing law (Eq. 1).
+* :mod:`repro.core.energy`    — the PUE/price/task-ratio energy-cost model (Sec. III/IV-A).
+* :mod:`repro.core.gmsa`      — the dynamic Global Manager Selection Algorithm:
+  Lyapunov drift-plus-penalty dispatch, exact per-slot LP solution (Sec. IV-B).
+* :mod:`repro.core.baselines` — DATA / RANDOM baselines (Sec. V-A) plus JSQ and
+  greedy-cost references.
+* :mod:`repro.core.iridium`   — bandwidth-aware task-allocation ratios in the
+  style of Iridium [Pu et al., SIGCOMM'15], used by the paper to generate r.
+* :mod:`repro.core.simulator` — the time-slotted trace-driven simulator
+  (jit + lax.scan over slots, vmap over Monte-Carlo runs).
+
+Array conventions (shared by every module here):
+    N — number of data centers / pods;  K — job types;  T — time slots.
+    Q     (N, K)  queue backlogs
+    A     (K,)    arrivals in the current slot
+    mu    (N, K)  service rates in the current slot
+    omega (N,)    energy-price weight per DC
+    pue   (N,)    PUE per DC
+    r     (K, N, N)  r[k, i, j] = fraction of type-k tasks executed at DC j
+                     when DC i is the global manager (rows sum to 1 over j)
+    P     (K,)    per-job IT energy of a type-k job
+    f     (N, K)  dispatch fractions (columns sum to 1)
+"""
+
+from repro.core.energy import EnergyModel, manager_energy_cost, slot_cost
+from repro.core.queues import queue_step, total_backlog
+from repro.core.gmsa import (
+    GMSAConfig,
+    drift_plus_penalty_scores,
+    gmsa_dispatch,
+    lp_objective,
+    lyapunov_drift_bound_B,
+)
+from repro.core.baselines import (
+    data_dispatch,
+    random_dispatch,
+    jsq_dispatch,
+    greedy_cost_dispatch,
+)
+from repro.core.iridium import iridium_reduce_placement, build_task_allocation
+from repro.core.simulator import SimInputs, SimOutputs, simulate, simulate_many
+
+__all__ = [
+    "EnergyModel",
+    "manager_energy_cost",
+    "slot_cost",
+    "queue_step",
+    "total_backlog",
+    "GMSAConfig",
+    "drift_plus_penalty_scores",
+    "gmsa_dispatch",
+    "lp_objective",
+    "lyapunov_drift_bound_B",
+    "data_dispatch",
+    "random_dispatch",
+    "jsq_dispatch",
+    "greedy_cost_dispatch",
+    "iridium_reduce_placement",
+    "build_task_allocation",
+    "SimInputs",
+    "SimOutputs",
+    "simulate",
+    "simulate_many",
+]

@@ -1,0 +1,124 @@
+"""Bandwidth-aware task placement in the style of Iridium [Pu et al., SIGCOMM'15].
+
+The paper generates its task-allocation ratios ``r`` with Iridium: place the
+reduce tasks of a geo-distributed job so the *bottleneck* inter-site transfer
+time is minimized, given per-site up/down bandwidths and the distribution of
+intermediate data.
+
+For one job with intermediate data of total size ``S``, a fraction ``d_j``
+of it residing at site j, uplink ``U_j`` and downlink ``D_j``, a reduce
+placement ``r`` (fractions of reduce tasks per site) induces transfer times
+
+    T_up(j)   = (1 - r_j) * d_j * S / U_j      (j's data shipped to remote reducers)
+    T_down(j) = r_j * (1 - d_j) * S / D_j      (remote data pulled to j's reducers)
+
+Iridium's placement LP is  min_r max_j max(T_up(j), T_down(j)) s.t. r in simplex.
+For a fixed bottleneck ``z`` the feasible set is a box
+``lo_j(z) <= r_j <= hi_j(z)`` intersected with the simplex, so the optimum is
+found by bisection on ``z`` — fully vectorized and jit-safe here (fixed
+iteration count), vmappable over job types.
+
+``build_task_allocation`` assembles the paper's (K, N, N) manager-conditioned
+ratio tensor by combining data-local map work, Iridium-placed reduce work and
+a manager-local aggregation share.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array, lax, vmap
+
+_BISECT_ITERS = 50
+_EPS = 1e-12
+
+
+def _bounds(z: Array, d: Array, up: Array, down: Array, size: Array):
+    """Per-site feasible box [lo, hi] for reduce fractions at bottleneck z."""
+    hi = jnp.where(d < 1.0, z * down / jnp.maximum((1.0 - d) * size, _EPS), jnp.inf)
+    lo = jnp.where(d > 0.0, 1.0 - z * up / jnp.maximum(d * size, _EPS), 0.0)
+    lo = jnp.maximum(lo, 0.0)
+    return lo, hi
+
+
+def _feasible(z: Array, d: Array, up: Array, down: Array, size: Array) -> Array:
+    lo, hi = _bounds(z, d, up, down, size)
+    return (
+        (jnp.sum(lo) <= 1.0 + 1e-9)
+        & (jnp.sum(jnp.minimum(hi, 1.0)) >= 1.0 - 1e-9)
+        & jnp.all(lo <= hi + 1e-9)
+    )
+
+
+def iridium_reduce_placement(
+    d: Array, up: Array, down: Array, size: float | Array = 1.0
+) -> tuple[Array, Array]:
+    """Bottleneck-minimizing reduce placement for one job type.
+
+    Args:
+        d: (N,) fractions of intermediate data per site (sums to 1).
+        up: (N,) uplink bandwidths (bytes/s — any consistent unit).
+        down: (N,) downlink bandwidths.
+        size: total intermediate data size (same unit-seconds as bandwidths).
+
+    Returns:
+        (r, z): (N,) reduce fractions in the simplex, and the achieved
+        bottleneck transfer time z*.
+    """
+    d = jnp.asarray(d, jnp.float32)
+    size = jnp.asarray(size, jnp.float32)
+    # Upper bound: put everything on one site through the slowest links.
+    z_hi0 = size * (1.0 / jnp.min(up) + 1.0 / jnp.min(down))
+
+    def body(carry, _):
+        z_lo, z_hi = carry
+        mid = 0.5 * (z_lo + z_hi)
+        ok = _feasible(mid, d, up, down, size)
+        return (jnp.where(ok, z_lo, mid), jnp.where(ok, mid, z_hi)), None
+
+    (z_lo, z_hi), _ = lax.scan(body, (jnp.float32(0.0), z_hi0), None, length=_BISECT_ITERS)
+    z = z_hi
+    lo, hi = _bounds(z, d, up, down, size)
+    hi = jnp.minimum(hi, 1.0)
+    # Distribute the remaining simplex mass proportionally to box headroom.
+    slack = jnp.maximum(hi - lo, 0.0)
+    missing = jnp.maximum(1.0 - jnp.sum(lo), 0.0)
+    share = jnp.where(jnp.sum(slack) > _EPS, slack / jnp.maximum(jnp.sum(slack), _EPS), 0.0)
+    r = lo + missing * share
+    r = r / jnp.maximum(jnp.sum(r), _EPS)   # numeric cleanup onto simplex
+    return r, z
+
+
+def build_task_allocation(
+    data_dist: Array,
+    up: Array,
+    down: Array,
+    size: float | Array = 1.0,
+    manager_share: float = 0.3,
+    map_share: float = 0.6,
+) -> Array:
+    """Assemble the (K, N, N) manager-conditioned task-allocation ratios.
+
+    When DC i manages a type-k job, the job's compute splits into:
+      * a manager-local coordination/aggregation share (``manager_share``) at i,
+      * data-local map work (fraction ``map_share`` of the remainder) placed
+        proportionally to the type-k dataset distribution,
+      * Iridium-placed reduce work (the rest) at the bottleneck-minimizing
+        placement for the type-k intermediate data.
+
+    Args:
+        data_dist: (K, N) per-type dataset distribution (rows sum to 1).
+        up/down: (N,) site bandwidths.
+        size: intermediate data size per job.
+        manager_share: fraction of per-job work pinned to the manager site.
+        map_share: of the non-manager work, the data-local (map) fraction.
+
+    Returns:
+        (K, N, N) row-stochastic-over-last-axis ratio tensor r[k, i, j].
+    """
+    data_dist = jnp.asarray(data_dist, jnp.float32)
+    k_types, n = data_dist.shape
+    reduce_r, _ = vmap(lambda dk: iridium_reduce_placement(dk, up, down, size))(data_dist)
+    base = map_share * data_dist + (1.0 - map_share) * reduce_r          # (K, N)
+    eye = jnp.eye(n, dtype=jnp.float32)
+    r = manager_share * eye[None, :, :] + (1.0 - manager_share) * base[:, None, :]
+    return r

@@ -1,0 +1,149 @@
+"""Time-slotted trace-driven simulator (paper Sec. V).
+
+One simulation run replays T slots:
+
+    observe (A(t), Q(t), mu(t), omega(t), PUE(t))
+      -> policy picks f(t)                       (GMSA / DATA / RANDOM / ...)
+      -> Cost(t) accrues                          (repro.core.energy)
+      -> queues update by Eq. 1                   (repro.core.queues)
+
+The whole run is a single ``jax.lax.scan`` (jit-compiled); Monte-Carlo
+replication is a ``jax.vmap`` over PRNG keys (the paper averages 1000 runs).
+Policies are closures with signature
+``(key, q, arrivals, mu, e, aux, scalar) -> f`` so GMSA and every baseline
+share one engine; ``scalar`` carries a *traced* control parameter (GMSA's V)
+so parameter sweeps reuse one compilation.
+
+Perf notes (EXPERIMENTS.md §Perf wall-clock track):
+  * the (K,N,N)×(N,) energy matvec is hoisted out of the scan body and
+    computed for all T slots in one einsum — and it is *closed over* rather
+    than vmapped, so Monte-Carlo runs share it;
+  * policies that declare ``state_independent = True`` (DATA, RANDOM) are
+    evaluated for all slots in one vectorized pass outside the scan;
+  * the per-slot body is then 4 fused elementwise/contraction ops.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.energy import manager_energy, manager_energy_cost
+from repro.core.queues import queue_step
+
+
+class SimInputs(NamedTuple):
+    """Trace bundle for one simulation run.
+
+    Shapes: T slots, N DCs, K job types.
+    """
+
+    arrivals: Array   # (T, K)   jobs arriving per slot
+    mu: Array         # (T, N, K) service rates per slot
+    omega: Array      # (T, N)   energy-price weights
+    pue: Array        # (T, N)   PUE traces
+    r: Array          # (K, N, N) task-allocation ratios
+    p_it: Array       # (K,)     per-job IT energy
+    data_dist: Array  # (K, N)   dataset distribution (aux for DATA baseline)
+
+
+class SimOutputs(NamedTuple):
+    cost: Array           # (T,) per-slot energy cost
+    energy: Array         # (T,) per-slot energy (PUE-weighted, unpriced)
+    backlog_total: Array  # (T,) sum of all queue backlogs
+    backlog_avg: Array    # (T,) mean backlog per (DC, type)
+    q_final: Array        # (N, K)
+    f_trace: Array        # (T, N, K) dispatch decisions
+
+
+PolicyFn = Callable[..., Array]
+
+
+def _energy_tables(inputs: SimInputs) -> tuple[Array, Array]:
+    """(T,K,N) cost and raw-energy tables for every slot in one einsum."""
+    wpue = inputs.omega * inputs.pue                               # (T, N)
+    e_cost = jnp.einsum("kij,tj->tki", inputs.r, wpue) * inputs.p_it[None, :, None]
+    e_raw = jnp.einsum("kij,tj->tki", inputs.r, inputs.pue) * inputs.p_it[None, :, None]
+    return e_cost, e_raw
+
+
+@functools.partial(jax.jit, static_argnames=("policy",))
+def simulate(
+    inputs: SimInputs, policy: PolicyFn, key: Array, scalar: float | Array = 0.0
+) -> SimOutputs:
+    """Run one trace-driven simulation under ``policy``."""
+    t_slots, k_types = inputs.arrivals.shape
+    n = inputs.mu.shape[1]
+    q0 = jnp.zeros((n, k_types), jnp.float32)
+    e_cost_all, e_raw_all = _energy_tables(inputs)                 # (T, K, N)
+    scalar = jnp.asarray(scalar, jnp.float32)
+
+    f_all = None
+    if getattr(policy, "state_independent", False):
+        keys = jax.random.split(key, t_slots)
+        f_all = jax.vmap(
+            lambda kk, a, m, e: policy(kk, q0, a, m, e, inputs.data_dist, scalar)
+        )(keys, inputs.arrivals, inputs.mu, e_cost_all)            # (T, N, K)
+
+    def slot(carry, xs):
+        q, key = carry
+        if f_all is None:
+            arrivals, mu, e_cost, e_raw = xs
+            key, sub = jax.random.split(key)
+            f = policy(sub, q, arrivals, mu, e_cost, inputs.data_dist, scalar)
+        else:
+            arrivals, mu, e_cost, e_raw, f = xs
+        fa = f * arrivals[None, :]
+        cost = jnp.sum(fa * e_cost.T)
+        energy = jnp.sum(fa * e_raw.T)
+        q_next = queue_step(q, f, arrivals, mu)
+        out = (cost, energy, jnp.sum(q_next), jnp.mean(q_next), f)
+        return (q_next, key), out
+
+    xs = (inputs.arrivals, inputs.mu, e_cost_all, e_raw_all)
+    if f_all is not None:
+        xs = xs + (f_all,)
+    (q_final, _), (cost, energy, btot, bavg, f_trace) = jax.lax.scan(
+        slot, (q0, key), xs
+    )
+    return SimOutputs(cost, energy, btot, bavg, q_final, f_trace)
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "build_inputs", "n_runs"))
+def simulate_many(
+    build_inputs: Callable[[Array], SimInputs],
+    policy: PolicyFn,
+    key: Array,
+    n_runs: int,
+    scalar: float | Array = 0.0,
+) -> SimOutputs:
+    """Monte-Carlo replication: fresh traces + fresh policy randomness per run.
+
+    ``build_inputs(key) -> SimInputs`` regenerates the stochastic traces
+    (arrivals, service rates) for each run; deterministic traces (prices,
+    PUE, ratios) are closed over and shared. Outputs are stacked on a
+    leading (n_runs,) axis.
+    """
+    keys = jax.random.split(key, n_runs)
+
+    def one(run_key):
+        k_build, k_sim = jax.random.split(run_key)
+        return simulate(build_inputs(k_build), policy, k_sim, scalar)
+
+    return jax.vmap(one)(keys)
+
+
+def summarize(outs: SimOutputs) -> dict:
+    """Time-averaged scalars (averaged over runs if a runs axis is present)."""
+    cost = jnp.mean(outs.cost)
+    backlog = jnp.mean(outs.backlog_avg)
+    return {
+        "time_avg_cost": float(cost),
+        "time_avg_energy": float(jnp.mean(outs.energy)),
+        "time_avg_backlog": float(backlog),
+        "final_backlog_total": float(jnp.mean(outs.q_final.sum(axis=(-2, -1)))),
+    }

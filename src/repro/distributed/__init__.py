@@ -1,0 +1,35 @@
+"""repro.distributed — sharding rules, collectives, gradient compression.
+
+The mesh is ("pod", "data", "model") — multi-pod — or ("data", "model")
+single-pod (repro.launch.mesh). Design (DESIGN.md §5):
+
+* params: Megatron-style TP over "model" (col-parallel up-proj / row-parallel
+  down-proj, head-sharded attention, head-sharded SSD, TP-in-expert MoE),
+  replicated over ("pod", "data");
+* batch: sharded over ("pod", "data");
+* divisibility policy: a dim shards only if its *semantic unit* (head count,
+  expert hidden, vocab pad) divides the axis size, else replicates — recorded
+  by `param_pspecs(..., log=...)`;
+* gradient sync: within-pod all-reduce is native fp32 (fast ICI); the
+  cross-pod leg (the paper's "core network" tier) optionally runs the int8
+  compressed all-reduce in repro.distributed.compression.
+"""
+
+from repro.distributed.sharding import (
+    param_pspecs,
+    batch_pspecs,
+    cache_pspecs,
+    logits_pspec,
+    axis_size,
+)
+from repro.distributed.compression import compressed_psum_pod, sync_tree
+
+__all__ = [
+    "param_pspecs",
+    "batch_pspecs",
+    "cache_pspecs",
+    "logits_pspec",
+    "axis_size",
+    "compressed_psum_pod",
+    "sync_tree",
+]

@@ -1,0 +1,99 @@
+"""int8 compressed cross-pod gradient all-reduce (with error feedback).
+
+The multi-pod mesh has two communication tiers: fast intra-pod ICI (the
+"data"/"model" axes) and the slow inter-pod WAN/DCN link (the "pod" axis) —
+exactly the paper's heterogeneous "core network". Gradient sync therefore
+splits:
+
+  * within-pod reduction: native fp32 (XLA's all-reduce over "data");
+  * cross-pod reduction: int8 quantized reduce-scatter + all-gather
+    implemented here, cutting pod-link bytes ~4x.
+
+Scheme (standard 1-bit-Adam-family construction, 8-bit variant):
+
+  1. per-leaf flatten, pad to a multiple of n_pods, view as (n_pods, chunk);
+  2. per-chunk absmax scale -> int8 quantize;
+  3. ``all_to_all`` over "pod" (the reduce-scatter data exchange: each pod
+     receives every pod's copy of *its* chunk);
+  4. dequantize + sum in fp32 (each pod owns the exact sum of its chunk);
+  5. requantize the summed chunk, ``all_gather`` over "pod", dequantize.
+
+Error feedback: the quantization residual of step 2 is returned so the
+training loop can carry it into the next step's gradients (the standard EF
+trick that restores convergence under biased compression).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+def _quantize(x: Array) -> tuple[Array, Array]:
+    """Symmetric int8 quantization per leading-axis row."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_pod(
+    leaf: Array, n_pods: int, axis_name: str = "pod"
+) -> tuple[Array, Array]:
+    """Compressed sum over the pod axis for one (per-device local) leaf.
+
+    Must run inside ``shard_map`` manual over ``axis_name``. Returns
+    (summed fp32 leaf, error-feedback residual with the leaf's shape/dtype).
+    """
+    shape, dtype = leaf.shape, leaf.dtype
+    flat = leaf.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % n_pods
+    flat = jnp.pad(flat, (0, pad))
+    rows = flat.reshape(n_pods, -1)                         # (pods, chunk)
+
+    q, scale = _quantize(rows)
+    residual = (rows - _dequantize(q, scale)).reshape(-1)[: flat.size - pad]
+
+    # Reduce-scatter data exchange: row p goes to pod p.
+    q_recv = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
+                                tiled=False)
+    s_recv = jax.lax.all_to_all(scale, axis_name, split_axis=0, concat_axis=0,
+                                tiled=False)
+    # (pods, chunk) received copies -> owned chunk sum in fp32.
+    owned = jnp.sum(_dequantize(q_recv, s_recv), axis=0, keepdims=True)  # (1, chunk)
+
+    q2, s2 = _quantize(owned)                               # (1, chunk), (1, 1)
+    q_all = jax.lax.all_gather(q2, axis_name, axis=0, tiled=True)   # (pods, chunk)
+    s_all = jax.lax.all_gather(s2, axis_name, axis=0, tiled=True)   # (pods, 1)
+    total = _dequantize(q_all, s_all).reshape(-1)[: flat.size - pad]
+
+    return total.reshape(shape).astype(dtype), residual.reshape(shape).astype(dtype)
+
+
+def sync_tree(grads, n_pods: int, axis_name: str = "pod", error_fb=None):
+    """Tree-wise compressed pod-axis mean. Runs INSIDE a shard_map that is
+    manual over ``axis_name`` (the train step owns that shard_map).
+
+    Args:
+        grads: per-pod partial gradient tree.
+        n_pods: pod-axis size.
+        error_fb: optional residual tree from the previous step (error
+            feedback is added before quantization).
+
+    Returns:
+        (grads averaged over pods, new error-feedback residual tree).
+    """
+    if error_fb is not None:
+        grads = jax.tree.map(lambda g, e: g + e.astype(g.dtype), grads, error_fb)
+    leaves, treedef = jax.tree.flatten(grads)
+    outs = [compressed_psum_pod(leaf, n_pods, axis_name) for leaf in leaves]
+    synced = treedef.unflatten([t / n_pods for t, _ in outs])
+    resid = treedef.unflatten([r for _, r in outs])
+    return synced, resid

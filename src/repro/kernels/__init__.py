@@ -1,0 +1,16 @@
+"""repro.kernels — Pallas TPU kernels for the framework's compute hot spots.
+
+Two kernels, each a (kernel.py, ops.py, ref.py) triple validated in
+interpret mode against the pure-jnp oracle (tests/test_kernels.py):
+
+* ``gmsa_score`` — the paper's per-slot dispatch inner loop at fleet scale:
+  fused cost matvec (MXU) + drift add (VPU) + running argmin reduction, one
+  VMEM pass over the (K, N, N) task-allocation tensor.
+* ``ssd_scan``   — Mamba-2 chunked SSD forward (the long_500k hot spot):
+  intra-chunk attention-form + cross-chunk recurrence carried in VMEM
+  scratch across the sequential chunk grid.
+
+The dry-run lowers the pure-JAX paths (XLA cost analysis cannot see inside
+``pallas_call`` custom-calls); kernels are opt-in for real TPU execution and
+benchmarked separately (benchmarks/kernel_bench.py). See DESIGN.md §6.
+"""

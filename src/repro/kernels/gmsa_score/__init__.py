@@ -1,0 +1,4 @@
+from repro.kernels.gmsa_score.ops import gmsa_score
+from repro.kernels.gmsa_score.ref import gmsa_score_ref
+
+__all__ = ["gmsa_score", "gmsa_score_ref"]

@@ -1,0 +1,52 @@
+"""jit'd public wrapper for the gmsa_score kernel: padding + unpacking.
+
+Padding semantics: managers are padded with q=+BIG so a padded column can
+never win the argmin; job types pad with zeros (their rows are discarded on
+slice-out); the executor axis pads r/wpue with zeros (no cost contribution).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.kernels.gmsa_score.kernel import J_T, K_T, N_T, gmsa_score_kernel
+
+_BIG = 3e38
+
+
+def _pad_to(x: Array, axis: int, mult: int, value: float = 0.0) -> Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gmsa_score(
+    q: Array,        # (K, N) backlogs (pre-transposed)
+    mu: Array,       # (K, N) service rates
+    a: Array,        # (K,)   arrivals
+    vp: Array,       # (K,)   V * P^k
+    r: Array,        # (K, N, N) task-allocation ratios
+    wpue: Array,     # (N,)   omega ⊙ PUE
+    *,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """Fused dispatch scores + argmin. Returns (scores (K, N), best (K,))."""
+    k_dim, n_dim = q.shape
+    qp = _pad_to(_pad_to(q.astype(jnp.float32), 1, N_T, _BIG), 0, K_T)
+    mup = _pad_to(_pad_to(mu.astype(jnp.float32), 1, N_T), 0, K_T)
+    ap = _pad_to(a.astype(jnp.float32)[:, None], 0, K_T, 1.0)
+    vpp = _pad_to(vp.astype(jnp.float32)[:, None], 0, K_T)
+    wp = _pad_to(wpue.astype(jnp.float32)[:, None], 0, J_T)
+    rp = _pad_to(_pad_to(_pad_to(r.astype(jnp.float32), 2, J_T), 1, N_T), 0, K_T)
+
+    scores, best = gmsa_score_kernel(qp, mup, ap, vpp, wp, rp, interpret=interpret)
+    return scores[:k_dim, :n_dim], best[:k_dim, 0]

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: Mamba-2 chunked SSD forward.
+
+Grid (B, H, S/Q) — the chunk index innermost so the (P, N) recurrent state
+lives in VMEM scratch across chunks of one (batch, head) stream:
+
+  per chunk (Q = chunk length):
+    cum   = cumsum(a * dt)                          (VPU, (Q,1))
+    CB    = C @ Bᵀ                                  (MXU, (Q,Q))
+    W     = CB ⊙ tril(exp(cum_t - cum_s)) ⊙ dt_s    (VPU)
+    y     = W @ x  +  (C @ h_inᵀ) ⊙ exp(cum)        (MXU + MXU)
+    h_out = exp(cum_Q) · h_in + (x ⊙ decay·dt)ᵀ @ B (MXU)
+
+TPU adaptation of the paper's (GPU) SSD kernel shape: the (Q,Q) intra-chunk
+"attention" matrix is sized to the MXU (Q=128 ⇒ 64 KiB fp32 in VMEM), state
+(P×N = 64×128) stays resident in VMEM across the whole stream — HBM traffic
+is exactly x/dt/B/C in and y out, the roofline floor for this op.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, state_ref):
+    c_idx = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (Q,)
+    a = a_ref[0, 0]                                  # scalar
+    bm = b_ref[0].astype(jnp.float32)                # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)                # (Q, N)
+
+    q_len = x.shape[0]
+    adt = a * dt                                     # (Q,)
+    cum = jnp.cumsum(adt)                            # (Q,)
+
+    # Intra-chunk attention-form term.
+    seg = cum[:, None] - cum[None, :]                # (Q, Q)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 1)
+    l_mat = jnp.exp(jnp.where(tri, seg, -jnp.inf))
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q, Q)
+    w = cb * l_mat * dt[None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (Q, P)
+
+    # Inter-chunk term from the carried state.
+    h_in = state_ref[...]                            # (P, N)
+    y_inter = jax.lax.dot_general(cm, h_in, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (Q, P)
+    y = y + y_inter * jnp.exp(cum)[:, None]
+
+    # State update: h' = exp(cum_Q) h + sum_s decay_out_s dt_s x_s ⊗ B_s.
+    decay_out = jnp.exp(cum[-1] - cum) * dt          # (Q,)
+    xw = x * decay_out[:, None]                      # (Q, P)
+    upd = jax.lax.dot_general(xw, bm, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[...] = jnp.exp(cum[-1]) * h_in + upd
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(c_idx == nc - 1)
+    def _emit_state():
+        hout_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_kernel(x, dt, a2d, b_mat, c_mat, *, chunk: int, interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); a2d: (H,1); b/c: (B,S,N). S % chunk == 0."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    grid = (bsz, h, s // chunk)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b, hh, c: (b, c, hh, 0)),  # x
+            pl.BlockSpec((1, chunk, 1), lambda b, hh, c: (b, c, hh)),        # dt
+            pl.BlockSpec((1, 1), lambda b, hh, c: (hh, 0)),                  # a
+            pl.BlockSpec((1, chunk, n), lambda b, hh, c: (b, c, 0)),         # B
+            pl.BlockSpec((1, chunk, n), lambda b, hh, c: (b, c, 0)),         # C
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b, hh, c: (b, c, hh, 0)),  # y
+            pl.BlockSpec((1, 1, p, n), lambda b, hh, c: (b, hh, 0, 0)),      # h_final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a2d, b_mat, c_mat)

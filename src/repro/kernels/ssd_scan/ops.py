@@ -1,0 +1,41 @@
+"""jit'd public wrapper for the SSD scan kernel (padding + dtype policy)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: Array,      # (B, S, H, P)
+    dt: Array,     # (B, S, H)
+    a: Array,      # (H,)
+    b_mat: Array,  # (B, S, N)
+    c_mat: Array,  # (B, S, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """Chunked SSD forward. Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    Sequence length is padded to a chunk multiple with dt=0 steps (exp(0)=1,
+    zero update — exact no-ops for the recurrence).
+    """
+    bsz, s, h, p = x.shape
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    y, h_final = ssd_scan_kernel(
+        x, dt, a.astype(jnp.float32)[:, None], b_mat, c_mat,
+        chunk=chunk, interpret=interpret,
+    )
+    return y[:, :s], h_final

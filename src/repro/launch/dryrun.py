@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before ANY other import (jax locks device
+# count on first init). Placeholder host devices exist ONLY for the dry-run.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each runnable cell this driver
+
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. builds the train/prefill/decode step for the architecture,
+  3. ``jax.jit(step, in_shardings, out_shardings).lower(**ShapeDtypeStructs)``
+     — no parameter or activation allocation anywhere,
+  4. ``.compile()`` — proving the sharding config is coherent end-to-end,
+  5. records ``memory_analysis()`` (fits/doesn't-fit), ``cost_analysis()``
+     (FLOPs / bytes for §Roofline) and the collective-bytes tally parsed
+     from the compiled HLO,
+  6. writes one JSON artifact per cell under benchmarks/artifacts/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both [--variant baseline] [--force]
+
+Structurally-inapplicable cells (encoder decode, full-attention 500k) are
+recorded as skipped-with-reason, per DESIGN.md §4.
+"""
+
+import argparse
+import dataclasses
+import json
+import math
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, list_archs
+from repro.configs.base import SHAPES, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import collective_bytes_from_hlo, roofline_terms
+from repro.models.inputs import cache_spec, make_batch, make_decode_tokens
+from repro.models.lm import init_cache, init_params
+from repro.serve.step import make_decode_step, make_prefill_step
+from repro.train.optimizer import adamw_init
+from repro.train.step import TrainStepConfig, make_train_step
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+
+def _sds(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _param_structs(cfg, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg, dtype))
+
+
+def _lower_one(cfg, shape, mesh, tcfg: TrainStepConfig, unroll: bool, attn: str,
+               kv_shard: str = "heads", kv_dtype=jnp.bfloat16):
+    """Lower+compile one step variant; returns the compiled artifact."""
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            tc = dataclasses.replace(tcfg, unroll_layers=unroll, attn_impl=attn)
+            step, _, _, shardings_for, init_efb = make_train_step(cfg, mesh, tc)
+            params = _param_structs(cfg)
+            opt = jax.eval_shape(adamw_init, params)
+            batch = make_batch(cfg, shape, as_spec=True)
+            efb = jax.eval_shape(init_efb, params)
+            in_sh, out_sh = shardings_for(batch, shape.global_batch)
+            lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh).lower(
+                _sds(params), _sds(opt), batch, _sds(efb)
+            )
+        elif shape.kind == "prefill":
+            fn, _, shardings_for = make_prefill_step(
+                cfg, mesh, attn, unroll_layers=unroll
+            )
+            params = _param_structs(cfg)
+            batch = make_batch(cfg, shape, as_spec=True)
+            psh, bsh = shardings_for(batch, shape.global_batch)
+            lowered = jax.jit(
+                lambda p, b: fn(p, **b), in_shardings=(psh, bsh)
+            ).lower(_sds(params), batch)
+        else:  # decode
+            fn, _, shardings_for = make_decode_step(
+                cfg, mesh, unroll_layers=unroll, kv_shard=kv_shard
+            )
+            params = _param_structs(cfg)
+            cache = cache_spec(cfg, shape, dtype=kv_dtype)
+            toks = make_decode_tokens(cfg, shape, as_spec=True)
+            in_sh, out_sh = shardings_for(cache, shape.global_batch)
+            lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(
+                _sds(params), cache, toks
+            )
+        return lowered.compile()
+
+
+def _cost_of(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll["total"],
+        "coll_by_kind": coll["by_kind"],
+    }
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, tcfg: TrainStepConfig,
+               pad_heads: int = 0, kv_shard: str = "heads", kv_dtype=jnp.bfloat16):
+    """Build + lower + compile one cell; returns the result record.
+
+    Three compiles (DESIGN.md §7 measurement protocol):
+      A. production program (blockwise attention, scan-over-layers, full L):
+         the compile PROOF + memory_analysis. Its cost_analysis is recorded
+         but NOT used for roofline — XLA's HloCostAnalysis counts while-loop
+         bodies once, so scanned/blocked programs undercount.
+      B./C. cost-extraction programs: L=1 / L=2, layers UNROLLED, naive
+         attention (loop-free => exact counts; naive and blockwise compute
+         identical attention FLOPs). Whole-step cost extrapolates as
+         B + (L-1)·(C-B); collectives likewise (TP collectives live in the
+         layer body; data-parallel grad all-reduce over stacked (L,...)
+         params scales linearly and is captured by the same marginal).
+    """
+    cfg = get_arch(arch)
+    if pad_heads and cfg.has_attention and cfg.num_heads < pad_heads:
+        # Deployment head-padding (§Perf C1): extra zero-init heads make the
+        # q projection shardable on the model axis; arch-equivalent at init.
+        cfg = dataclasses.replace(
+            cfg, num_heads=pad_heads, head_dim=cfg.resolved_head_dim
+        )
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = math.prod(mesh.devices.shape)
+
+    t0 = time.time()
+    compiled_full = _lower_one(cfg, shape, mesh, tcfg, unroll=False,
+                               attn=tcfg.attn_impl, kv_shard=kv_shard,
+                               kv_dtype=kv_dtype)
+    compile_s = time.time() - t0
+    mem = compiled_full.memory_analysis()
+    full_cost = _cost_of(compiled_full)
+
+    cfg1 = dataclasses.replace(cfg, num_layers=1)
+    cfg2 = dataclasses.replace(cfg, num_layers=2)
+    # Swap the registry cfg without re-registering: lower directly.
+    c1 = _cost_of(_lower_one(cfg1, shape, mesh, tcfg, unroll=True, attn="naive", kv_shard=kv_shard, kv_dtype=kv_dtype))
+    c2 = _cost_of(_lower_one(cfg2, shape, mesh, tcfg, unroll=True, attn="naive", kv_shard=kv_shard, kv_dtype=kv_dtype))
+    ell = cfg.num_layers
+
+    def extrap(key):
+        return c1[key] + (ell - 1) * (c2[key] - c1[key])
+
+    # Flash-floor memory bytes: the same L1/L2 extrapolation on the BLOCKWISE
+    # program. Its inner KV-chunk loop is counted once by HloCostAnalysis,
+    # which here is exactly what we want: score tiles held in VMEM never hit
+    # HBM on the TPU target, so the undercounted bytes approximate the fused-
+    # attention HBM traffic (Q/K/V/O flows). Naive bytes remain the upper
+    # bound. Decode steps have no attention loops — both programs coincide.
+    if shape.kind in ("train", "prefill") and cfg.has_attention:
+        b1 = _cost_of(_lower_one(cfg1, shape, mesh, tcfg, unroll=True, attn="blockwise"))
+        b2 = _cost_of(_lower_one(cfg2, shape, mesh, tcfg, unroll=True, attn="blockwise"))
+        bytes_flash = b1["bytes"] + (ell - 1) * (b2["bytes"] - b1["bytes"])
+    else:
+        bytes_flash = None
+
+    coll_by_kind = {
+        k: c1["coll_by_kind"].get(k, 0.0)
+        + (ell - 1) * (c2["coll_by_kind"].get(k, 0.0) - c1["coll_by_kind"].get(k, 0.0))
+        for k in set(c1["coll_by_kind"]) | set(c2["coll_by_kind"])
+    }
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "variant": tcfg_signature(tcfg, shape.kind),
+        "compile_seconds": round(compile_s, 1),
+        "flops": extrap("flops"),
+        "bytes_accessed": extrap("bytes"),
+        "bytes_accessed_flash": bytes_flash if bytes_flash is not None else extrap("bytes"),
+        "collective_bytes": extrap("coll"),
+        "collective_breakdown": coll_by_kind,
+        "production_program_raw_cost": full_cost,   # loop-bodies-once numbers
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": mem.peak_memory_in_bytes,
+        },
+        "model_flops_6nd": model_flops(cfg, shape_name),
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    record["roofline"] = roofline_terms(
+        flops=record["flops"],
+        bytes_accessed=record["bytes_accessed_flash"],
+        collective_bytes=record["collective_bytes"],
+        chips=n_chips,
+    )
+    record["roofline"]["memory_s_naive_upper"] = (
+        record["bytes_accessed"] / 819e9
+    )
+    record["roofline"]["useful_flops_ratio"] = (
+        record["model_flops_6nd"] / (record["flops"] * n_chips)
+        if record["flops"] > 0 else None
+    )
+    return record
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """MODEL_FLOPS = 6·N_active·D tokens (train: ×1 fwd+bwd already in 6;
+    decode: per-step tokens = batch)."""
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens_per_step
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens_per_step
+    return 2.0 * n_active * shape.global_batch
+
+
+def tcfg_signature(tcfg: TrainStepConfig, kind: str) -> str:
+    if kind != "train":
+        return f"{kind}:attn={tcfg.attn_impl}"
+    return (
+        f"train:mb={tcfg.microbatches},remat={tcfg.remat},"
+        f"attn={tcfg.attn_impl},sync={tcfg.grad_sync}"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="dots", choices=["none", "dots", "full"])
+    ap.add_argument("--attn", default="blockwise", choices=["blockwise", "naive"])
+    ap.add_argument("--grad-sync", default="native", choices=["native", "int8"])
+    ap.add_argument("--pad-heads", type=int, default=0)
+    ap.add_argument("--kv-shard", default="auto", choices=["auto", "heads", "seq"])
+    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "fp8"])
+    ap.add_argument("--variant", default="baseline",
+                    help="artifact filename tag for §Perf iterations")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    tcfg = TrainStepConfig(
+        microbatches=args.microbatches, remat=args.remat,
+        attn_impl=args.attn, grad_sync=args.grad_sync,
+    )
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        cfg = get_arch(arch)
+        for shape_name in shapes:
+            ok, reason = shape_applicable(cfg, SHAPES[shape_name])
+            for multi in meshes:
+                mesh_tag = "2x16x16" if multi else "16x16"
+                out = ART_DIR / f"{arch}__{shape_name}__{mesh_tag}__{args.variant}.json"
+                if out.exists() and not args.force:
+                    print(f"[cached] {out.name}")
+                    n_ok += 1
+                    continue
+                if not ok:
+                    out.write_text(json.dumps(
+                        {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                         "skipped": reason}, indent=1))
+                    print(f"[skip]   {arch} × {shape_name} × {mesh_tag}: {reason}")
+                    n_skip += 1
+                    continue
+                try:
+                    t0 = time.time()
+                    rec = lower_cell(arch, shape_name, multi, tcfg,
+                                     pad_heads=args.pad_heads, kv_shard=args.kv_shard,
+                                     kv_dtype=jnp.float8_e4m3fn if args.kv_dtype == "fp8" else jnp.bfloat16)
+                    out.write_text(json.dumps(rec, indent=1))
+                    print(
+                        f"[ok]     {arch} × {shape_name} × {mesh_tag}: "
+                        f"compile={rec['compile_seconds']}s "
+                        f"flops={rec['flops']:.3e} coll={rec['collective_bytes']:.3e} "
+                        f"(total {time.time()-t0:.0f}s)", flush=True,
+                    )
+                    n_ok += 1
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    out.with_suffix(".FAILED.json").write_text(json.dumps(
+                        {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                         "error": str(e), "trace": traceback.format_exc()}, indent=1))
+                    print(f"[FAIL]   {arch} × {shape_name} × {mesh_tag}: {e}", flush=True)
+                    n_fail += 1
+    print(f"dry-run done: ok={n_ok} skip={n_skip} fail={n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

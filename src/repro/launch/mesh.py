@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — required because the dry-run
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+initialization while tests/benches must keep seeing 1 device.
+
+Topology (TPU v5e class):
+  * single-pod:  (16, 16)    axes ("data", "model")  — 256 chips
+  * multi-pod:   (2, 16, 16) axes ("pod", "data", "model") — 512 chips;
+    the "pod" axis is the slow WAN/DCN tier (the paper's core network).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None, multi_pod: bool = False):
+    """Small mesh over whatever devices exist (tests / subprocess checks)."""
+    n = n_devices or len(jax.devices())
+    if multi_pod:
+        assert n % 2 == 0 and n >= 4
+        return jax.make_mesh((2, n // 4, 2), ("pod", "data", "model"))
+    if n == 1:
+        return jax.make_mesh((1, 1), ("data", "model"))
+    return jax.make_mesh((n // 2, 2), ("data", "model"))

@@ -1,0 +1,99 @@
+"""Roofline-term derivation from compiled dry-run artifacts (DESIGN.md §7).
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI per chip.
+
+    compute    = HLO_FLOPs       / (chips × peak)
+    memory     = HLO_bytes       / (chips × hbm_bw)
+    collective = collective_bytes/ (chips × link_bw)
+
+``collective_bytes`` is not in ``cost_analysis()`` — we parse the compiled
+HLO text and sum the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op (fusion-safe: collective
+ops are never fused on the XLA:CPU/SPMD pipeline used for the dry-run).
+"""
+
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link per chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every tensor literal in an HLO result type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the compiled HLO."""
+    by_kind: dict[str, float] = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # result lines look like:  %name = TYPE kind(...), ...
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\/ ]+?)\s+([\w\-]+)\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = next((c for c in _COLLECTIVES if op == c or op.startswith(c + ".")), None)
+        if kind is None:
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        by_kind[kind] = by_kind.get(kind, 0.0) + nbytes
+        total += nbytes
+    return {"total": total, "by_kind": by_kind}
+
+
+def roofline_terms(
+    flops: float, bytes_accessed: float, collective_bytes: float, chips: int,
+    peak_flops: float = PEAK_FLOPS, hbm_bw: float = HBM_BW, ici_bw: float = ICI_BW,
+) -> dict:
+    """Three roofline terms in seconds + the dominant bottleneck.
+
+    NOTE on units (verified empirically, see EXPERIMENTS.md §Dry-run): after
+    SPMD partitioning ``compiled.cost_analysis()`` reports PER-DEVICE
+    flops/bytes — the compiled module *is* the per-device program. The
+    assignment's ``HLO_FLOPs / (chips × peak)`` with whole-program FLOPs is
+    therefore exactly ``flops_per_device / peak`` here; ``chips`` is kept in
+    the signature for the record but not divided again. Collective bytes are
+    parsed from the same per-device module.
+    """
+    del chips  # per-device inputs already; see docstring
+    compute_s = flops / peak_flops if flops > 0 else 0.0
+    memory_s = bytes_accessed / hbm_bw if bytes_accessed > 0 else 0.0
+    collective_s = collective_bytes / ici_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    return {
+        **terms,
+        "dominant": dominant,
+        "step_time_s": step_s,
+        "roofline_fraction": compute_s / step_s if step_s > 0 else None,
+    }

@@ -1,0 +1,38 @@
+"""repro.models — the architecture zoo (10 assigned LM-family backbones).
+
+Pure-functional JAX models (no framework deps): params are pytrees with
+layer-stacked leaves (leading ``L`` axis) consumed by ``jax.lax.scan``, so
+HLO size and compile time are O(1) in depth — essential for the 512-device
+dry-runs of the 76B/80L configs on this single-core host.
+
+Modules:
+    layers.py     — norms, MLPs, embeddings, RoPE
+    attention.py  — GQA attention: naive + blockwise(flash-style) + decode
+    moe.py        — top-k routed experts (sort-based dispatch, capacity drop)
+    ssm.py        — Mamba-2 SSD (chunked scan) + single-step decode
+    lm.py         — init / train & hybrid blocks / decode step / counting
+    frontends.py  — vision & audio stubs (precomputed embeddings)
+    inputs.py     — batch builders / ShapeDtypeStruct specs per (arch, shape)
+"""
+
+from repro.models.lm import (
+    init_params,
+    forward,
+    prefill_step,
+    decode_step,
+    loss_fn,
+    count_params,
+    init_cache,
+)
+from repro.models.inputs import make_batch
+
+__all__ = [
+    "init_params",
+    "forward",
+    "prefill_step",
+    "decode_step",
+    "loss_fn",
+    "count_params",
+    "init_cache",
+    "make_batch",
+]

@@ -1,0 +1,220 @@
+"""GQA attention: naive, blockwise (flash-style, non-materializing), decode.
+
+Three execution paths share one set of weights:
+
+* ``attend_naive``    — materializes the (S, S) score matrix. Reference path;
+  used for short sequences and as the oracle for the blockwise path.
+* ``attend_blockwise``— online-softmax over KV chunks via ``lax.scan``; peak
+  activation memory O(S·chunk) instead of O(S²). This is the path the 32k
+  prefill and all training shapes use (a beyond-paper memory optimization
+  recorded in EXPERIMENTS.md §Perf).
+* ``attend_decode``   — one query token against a (possibly ring-buffered)
+  KV cache.
+
+Masks: causal, bidirectional (encoder), sliding-window (Hymba), all handled
+in both naive and blockwise forms.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+_NEG_INF = -1e30
+#: Sentinel position for padded KV slots; any k_pos below _PAD_LIMIT is
+#: excluded by every mask mode (found by the hypothesis sweep: padded keys
+#: leaked into *bidirectional* attention, whose mask has no diff test).
+_PAD_POS = -(10 ** 9)
+_PAD_LIMIT = -(10 ** 8)
+
+
+def _mask_bias(
+    q_pos: Array, k_pos: Array, causal: bool, window: int
+) -> Array:
+    """(Sq, Sk) additive mask bias from absolute positions."""
+    diff = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.broadcast_to(k_pos[None, :] > _PAD_LIMIT, diff.shape)
+    if causal:
+        ok = ok & (diff >= 0)
+    if window > 0:
+        ok = ok & (diff < window)
+    return jnp.where(ok, 0.0, _NEG_INF).astype(jnp.float32)
+
+
+def _repeat_kv(k: Array, groups: int) -> Array:
+    """(B, S, Hkv, d) -> (B, S, Hkv*groups, d) by head repetition."""
+    if groups == 1:
+        return k
+    b, s, hkv, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, groups, d)).reshape(
+        b, s, hkv * groups, d
+    )
+
+
+def attend_naive(
+    q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+    causal: bool = True, window: int = 0,
+) -> Array:
+    """Reference attention. q: (B,Sq,H,d); k/v: (B,Sk,Hkv,d). Returns (B,Sq,H,d)."""
+    groups = q.shape[2] // k.shape[2]
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    logits = logits + _mask_bias(q_pos, k_pos, causal, window)[None, None]
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attend_blockwise(
+    q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+    causal: bool = True, window: int = 0, chunk: int = 1024,
+    q_chunk: int = 1024,
+) -> Array:
+    """Flash-style online-softmax attention, blocked over BOTH Q and KV.
+
+    Never materializes (Sq, Sk): the inner ``lax.scan`` runs online softmax
+    over KV chunks; the outer ``lax.map`` tiles Q so the live score block is
+    (B, H, q_chunk, chunk). Numerics match ``attend_naive`` to bf16 tolerance
+    (asserted in tests/test_models.py).
+    """
+    b, sq, h, d = q.shape
+    if sq > q_chunk:
+        if sq % q_chunk:
+            pad_q = q_chunk - sq % q_chunk
+            q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+            q_pos = jnp.pad(q_pos, (0, pad_q), constant_values=q_pos[-1])
+        nq = q.shape[1] // q_chunk
+        q_tiles = q.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+        qp_tiles = q_pos.reshape(nq, q_chunk)
+        out_tiles = jax.lax.map(
+            lambda xs: _attend_blockwise_inner(
+                xs[0], k, v, xs[1], k_pos, causal, window, chunk
+            ),
+            (q_tiles, qp_tiles),
+        )
+        out = out_tiles.transpose(1, 0, 2, 3, 4).reshape(b, -1, h, d)
+        return out[:, :sq]
+    return _attend_blockwise_inner(q, k, v, q_pos, k_pos, causal, window, chunk)
+
+
+def _attend_blockwise_inner(
+    q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+    causal: bool, window: int, chunk: int,
+) -> Array:
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    if sk % chunk:
+        pad = chunk - sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=_PAD_POS)
+        sk += pad
+    groups = h // k.shape[2]
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    n_chunks = sk // chunk
+    k = k.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    v = v.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    k_pos_c = k_pos.reshape(n_chunks, chunk)
+    scale = d ** -0.5
+
+    def body(carry, xs):
+        m, l, acc = carry                       # (B,H,Sq), (B,H,Sq), (B,H,Sq,d)
+        kc, vc, kp = xs                          # (B,chunk,H,d), ..., (chunk,)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kc).astype(jnp.float32) * scale
+        logits = logits + _mask_bias(q_pos, kp, causal, window)[None, None]
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        # Guard fully-masked rows: keep m finite so exp() stays 0, not NaN.
+        m_safe = jnp.maximum(m_new, -1e29)
+        p = jnp.exp(logits - m_safe[..., None])
+        alpha = jnp.exp(jnp.clip(m - m_new, a_max=0.0))
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vc
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (k, v, k_pos_c))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)   # (B,Sq,H,d)
+
+
+def _constrain_seq_sharded(x: Array, seq_axis: int) -> Array:
+    """Pin ``x``'s seq dim to "model" AND keep dim 0 batch-sharded
+    (split-KV decode).
+
+    No-op outside a mesh context or when "model" is absent. Forcing the
+    logits to be sequence-sharded makes XLA emit the flash-decoding
+    partition (partial softmax stats + psum) instead of its default
+    head-partition, which all-gathers the whole KV cache per layer
+    (measured: 43 GB/step on granite-3-2b decode_32k — §Perf A2). The batch
+    axes must be named explicitly: an unmentioned dim in a sharding
+    constraint means *replicated*, and the partitioner obliges with a
+    full-batch all-gather (§Perf A3).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh.empty or "model" not in mesh.axis_names:
+        return x
+    if x.shape[seq_axis] % mesh.shape["model"]:
+        return x
+    batch_axes = tuple(
+        a for a in ("pod", "data")
+        if a in mesh.axis_names and x.shape[0] % mesh.shape[a] == 0
+    )
+    spec = [None] * x.ndim
+    if batch_axes:
+        spec[0] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    spec[seq_axis] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def attend_decode(
+    q: Array, k_cache: Array, v_cache: Array, q_pos: Array, cache_pos: Array,
+    window: int = 0, seq_sharded: bool = False,
+) -> Array:
+    """Single-token attention against a KV cache.
+
+    Grouped-query form: the KV head dim is never materialized ``groups``
+    times (the broadcast+reshape of ``_repeat_kv`` blocks SPMD propagation
+    through the cache). With ``seq_sharded`` the score/probs tensors are
+    constrained to the "model" axis on the cache-seq dim — distributed
+    flash-decoding (split-KV), combined by small softmax-stat collectives.
+
+    Args:
+        q: (B, 1, H, d) query for the new token.
+        k_cache/v_cache: (B, S_cache, Hkv, d). For sliding-window layers this
+            is a ring buffer of size ``window``.
+        q_pos: (B,) absolute position of the query token.
+        cache_pos: (B, S_cache) absolute position per cache slot
+            (−1 for unwritten slots).
+    Returns: (B, 1, H, d).
+    """
+    b, _, h, d = q.shape
+    if k_cache.dtype in (jnp.float8_e4m3fn, jnp.float8_e5m2):
+        # Quantized KV cache (direct-cast fp8): upcast for the MXU einsums.
+        k_cache = k_cache.astype(jnp.bfloat16)
+        v_cache = v_cache.astype(jnp.bfloat16)
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, 1, hkv, g, d)
+    scale = d ** -0.5
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache).astype(jnp.float32) * scale
+    if seq_sharded:
+        logits = _constrain_seq_sharded(logits, 4)
+    diff = q_pos[:, None] - cache_pos                 # (B, S_cache)
+    ok = (cache_pos >= 0) & (diff >= 0)
+    if window > 0:
+        ok &= diff < window
+    bias = jnp.where(ok, 0.0, _NEG_INF)[:, None, None, None, :]
+    probs = jax.nn.softmax(logits + bias, axis=-1).astype(q.dtype)
+    if seq_sharded:
+        probs = _constrain_seq_sharded(probs, 4)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v_cache)
+    return out.reshape(b, 1, h, d)

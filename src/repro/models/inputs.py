@@ -1,0 +1,99 @@
+"""Batch builders / input specs per (architecture × shape) cell.
+
+One function serves three callers with identical structure:
+
+* smoke tests          — concrete random arrays on CPU;
+* the training loop    — concrete arrays from the token pipeline;
+* the multi-pod dry-run — ``jax.ShapeDtypeStruct`` stand-ins (``as_spec=True``,
+  no allocation, the shannon/kernels pattern).
+
+Frontend stubs (assignment spec): VLM batches carry 256 precomputed
+1024-dim patch embeddings per sample alongside text tokens; audio batches
+carry per-frame 512-dim embeddings *instead of* tokens.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.frontends import AUDIO_STUB_DIM, VISION_STUB_DIM, VISION_TOKENS
+
+
+def _mk(key, shape, dtype, kind, vocab=None, as_spec=False):
+    if as_spec:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if kind == "tokens":
+        return jax.random.randint(key, shape, 0, vocab, dtype=dtype)
+    if kind == "ones":
+        return jnp.ones(shape, dtype)
+    return (0.02 * jax.random.normal(key, shape)).astype(dtype)
+
+
+def make_batch(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    key=None,
+    as_spec: bool = False,
+    embed_dtype=jnp.bfloat16,
+) -> dict:
+    """Inputs for train/prefill kinds. Decode tokens come from make_decode_batch."""
+    if key is None and not as_spec:
+        key = jax.random.key(0)
+    keys = jax.random.split(key, 4) if key is not None else [None] * 4
+    b, s = shape.global_batch, shape.seq_len
+    tok_i32 = jnp.int32
+    batch: dict = {}
+
+    if cfg.frontend == "audio":
+        batch["prefix_embeds"] = _mk(keys[0], (b, s, AUDIO_STUB_DIM), embed_dtype, "emb", as_spec=as_spec)
+        if shape.kind == "train":
+            batch["labels"] = _mk(keys[1], (b, s), tok_i32, "tokens", cfg.vocab_size, as_spec)
+            batch["loss_mask"] = _mk(keys[2], (b, s), jnp.float32, "ones", as_spec=as_spec)
+        return batch
+
+    if cfg.frontend == "vision":
+        # 256 image tokens for the assigned shapes; scale down for tiny
+        # smoke sequences so the text span stays non-empty.
+        n_img = min(VISION_TOKENS, s // 2)
+        s_text = s - n_img
+        batch["prefix_embeds"] = _mk(keys[0], (b, n_img, VISION_STUB_DIM), embed_dtype, "emb", as_spec=as_spec)
+        batch["tokens"] = _mk(keys[1], (b, s_text), tok_i32, "tokens", cfg.vocab_size, as_spec)
+        if shape.kind == "train":
+            batch["labels"] = _mk(keys[2], (b, s_text), tok_i32, "tokens", cfg.vocab_size, as_spec)
+            batch["loss_mask"] = _mk(keys[3], (b, s_text), jnp.float32, "ones", as_spec=as_spec)
+        return batch
+
+    batch["tokens"] = _mk(keys[0], (b, s), tok_i32, "tokens", cfg.vocab_size, as_spec)
+    if shape.kind == "train":
+        batch["labels"] = _mk(keys[1], (b, s), tok_i32, "tokens", cfg.vocab_size, as_spec)
+        batch["loss_mask"] = _mk(keys[2], (b, s), jnp.float32, "ones", as_spec=as_spec)
+    return batch
+
+
+def make_decode_tokens(
+    cfg: ModelConfig, shape: ShapeConfig, key=None, as_spec: bool = False
+):
+    """(B, 1) next-token ids for a decode cell."""
+    if as_spec:
+        return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    if key is None:
+        key = jax.random.key(1)
+    return jax.random.randint(key, (shape.global_batch, 1), 0, cfg.vocab_size, dtype=jnp.int32)
+
+
+def cache_spec(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct tree matching ``init_cache`` (for dry-run lowering).
+
+    ``dtype`` may be ``jnp.float8_e4m3fn`` for the quantized-KV variant
+    (halves KV HBM; attend_decode upcasts for the einsums).
+    """
+    from repro.models.lm import init_cache
+
+    shapes = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len, dtype,
+                           prefilled=shape.seq_len)
+    )
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), shapes)

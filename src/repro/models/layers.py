@@ -1,0 +1,75 @@
+"""Shared neural building blocks (functional, framework-free)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+def trunc_normal(key: Array, shape: tuple, fan_in: int, dtype) -> Array:
+    """Truncated-normal init with 1/sqrt(fan_in) scale (standard LM init)."""
+    std = fan_in ** -0.5
+    return (std * jax.random.truncated_normal(key, -3.0, 3.0, shape)).astype(dtype)
+
+
+def rms_norm(x: Array, scale: Array, eps: float) -> Array:
+    """RMSNorm in fp32 statistics (bf16-safe), cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float) -> Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    """SwiGLU MLP: down( silu(x@gate) * (x@up) )."""
+    g = jax.nn.silu(x @ w_gate)
+    return (g * (x @ w_up)) @ w_down
+
+
+def gelu_mlp(x: Array, w_up: Array, b_up: Array, w_down: Array, b_down: Array) -> Array:
+    return jax.nn.gelu(x @ w_up + b_up) @ w_down + b_down
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_table(positions: Array, head_dim: int, theta: float) -> tuple[Array, Array]:
+    """(sin, cos) tables for given positions.
+
+    Args:
+        positions: (...,) integer positions.
+        head_dim: per-head dim (even).
+    Returns:
+        sin, cos of shape positions.shape + (head_dim // 2,), fp32.
+    """
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: Array, sin: Array, cos: Array) -> Array:
+    """Rotate pairs (split-half convention). x: (..., S, H, hd); sin/cos: (..., S, half).
+
+    sin/cos broadcast over the head axis.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin_b = sin[..., None, :]   # (..., S, 1, half) broadcasting over heads
+    cos_b = cos[..., None, :]
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos_b - xf2 * sin_b, xf2 * cos_b + xf1 * sin_b], axis=-1
+    )
+    return out.astype(x.dtype)

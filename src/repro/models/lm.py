@@ -1,0 +1,657 @@
+"""Model assembly: init / forward / decode / loss / param counting.
+
+All ten assigned architectures are built from one block vocabulary
+(dense-attention, MoE-FFN, SSD, hybrid attention+SSD, encoder) selected by
+``ModelConfig`` flags. Layer parameters are *stacked* on a leading L axis and
+consumed with ``jax.lax.scan`` so HLO size / compile time are depth-
+independent (DESIGN.md §5).
+
+Param-shape specs (`layer_param_specs`) are the single source of truth shared
+by ``init_params`` and ``count_params`` — the two cannot drift.
+
+Vocab padding: embedding/logit dims are padded to a multiple of 128 so the
+"model" mesh axis (16) always divides them; padded logit columns are masked
+to -inf in the loss and sampling paths.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import attend_blockwise, attend_decode, attend_naive
+from repro.models.layers import (
+    apply_rope,
+    gelu_mlp,
+    layer_norm,
+    rms_norm,
+    rope_table,
+    swiglu,
+    trunc_normal,
+)
+from repro.models.moe import moe_ffn, shared_expert_ffn
+from repro.models.ssm import (
+    causal_conv,
+    causal_conv_update,
+    ssd_chunked,
+    ssd_step,
+)
+
+VOCAB_PAD_MULTIPLE = 128
+
+Params = dict[str, Any]
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return math.ceil(cfg.vocab_size / VOCAB_PAD_MULTIPLE) * VOCAB_PAD_MULTIPLE
+
+
+# ---------------------------------------------------------------------------
+# Param specs (single source of truth for init + counting)
+# ---------------------------------------------------------------------------
+
+def _ssm_dims(cfg: ModelConfig) -> dict[str, int]:
+    d_inner = cfg.d_inner
+    n = cfg.ssm_state
+    heads = cfg.ssm_heads
+    conv_dim = d_inner + 2 * n
+    in_total = 2 * d_inner + 2 * n + heads      # z, x, B, C, dt
+    return dict(d_inner=d_inner, n=n, heads=heads, conv_dim=conv_dim, in_total=in_total)
+
+
+def layer_param_specs(cfg: ModelConfig) -> dict[str, tuple[tuple, int, str]]:
+    """name -> (shape, fan_in, kind) for one layer. kind: normal|zeros|ones|special."""
+    d = cfg.d_model
+    specs: dict[str, tuple[tuple, int, str]] = {}
+
+    if cfg.has_attention:
+        hd = cfg.resolved_head_dim
+        specs["ln1"] = ((d,), 0, "ones")
+        if cfg.act == "gelu":
+            specs["ln1_bias"] = ((d,), 0, "zeros")
+        specs["wq"] = ((d, cfg.num_heads * hd), d, "normal")
+        specs["wk"] = ((d, cfg.num_kv_heads * hd), d, "normal")
+        specs["wv"] = ((d, cfg.num_kv_heads * hd), d, "normal")
+        specs["wo"] = ((cfg.num_heads * hd, d), cfg.num_heads * hd, "normal")
+        if cfg.qkv_bias:
+            specs["bq"] = ((cfg.num_heads * hd,), 0, "zeros")
+            specs["bk"] = ((cfg.num_kv_heads * hd,), 0, "zeros")
+            specs["bv"] = ((cfg.num_kv_heads * hd,), 0, "zeros")
+
+    if cfg.has_ssm:
+        s = _ssm_dims(cfg)
+        di, n, heads = s["d_inner"], s["n"], s["heads"]
+        w = cfg.ssm_conv_width
+        specs["ln_ssm"] = ((d,), 0, "ones")
+        # The Mamba-2 in_proj/conv are split per component (z, x, B, C, dt)
+        # so tensor-parallel sharding can put the head-structured pieces
+        # (z, x, dt — sharded over SSD heads) and the shared-state pieces
+        # (B, C — replicated) on different layouts. Depthwise conv and the
+        # fused matmul split exactly; mathematically identical to the fused
+        # checkpoint layout.
+        specs["w_z"] = ((d, di), d, "normal")
+        specs["w_x"] = ((d, di), d, "normal")
+        specs["w_b"] = ((d, n), d, "normal")
+        specs["w_c"] = ((d, n), d, "normal")
+        specs["w_dt"] = ((d, heads), d, "normal")
+        specs["conv_x_w"] = ((w, di), w, "normal")
+        specs["conv_x_b"] = ((di,), 0, "zeros")
+        specs["conv_b_w"] = ((w, n), w, "normal")
+        specs["conv_b_b"] = ((n,), 0, "zeros")
+        specs["conv_c_w"] = ((w, n), w, "normal")
+        specs["conv_c_b"] = ((n,), 0, "zeros")
+        specs["a_log"] = ((heads,), 0, "a_log")
+        specs["d_skip"] = ((heads,), 0, "ones")
+        specs["dt_bias"] = ((heads,), 0, "dt_bias")
+        specs["ssm_norm"] = ((di,), 0, "ones")
+        specs["ssm_out"] = ((di, d), di, "normal")
+
+    if cfg.hybrid:
+        specs["branch_attn_norm"] = ((d,), 0, "ones")
+        specs["branch_ssm_norm"] = ((d,), 0, "ones")
+
+    if cfg.is_moe:
+        f = cfg.moe_d_ff or cfg.d_ff
+        specs["ln2"] = ((d,), 0, "ones")
+        specs["router"] = ((d, cfg.num_experts), d, "normal")
+        specs["we_gate"] = ((cfg.num_experts, d, f), d, "normal")
+        specs["we_up"] = ((cfg.num_experts, d, f), d, "normal")
+        specs["we_down"] = ((cfg.num_experts, f, d), f, "normal")
+        if cfg.num_shared_experts:
+            fs = cfg.num_shared_experts * f
+            specs["ws_gate"] = ((d, fs), d, "normal")
+            specs["ws_up"] = ((d, fs), d, "normal")
+            specs["ws_down"] = ((fs, d), fs, "normal")
+    elif cfg.d_ff > 0:
+        f = cfg.d_ff
+        specs["ln2"] = ((d,), 0, "ones")
+        if cfg.act == "gelu":
+            specs["ln2_bias"] = ((d,), 0, "zeros")
+            specs["w_up"] = ((d, f), d, "normal")
+            specs["b_up"] = ((f,), 0, "zeros")
+            specs["w_down"] = ((f, d), f, "normal")
+            specs["b_down"] = ((d,), 0, "zeros")
+        else:
+            specs["w_gate"] = ((d, f), d, "normal")
+            specs["w_up"] = ((d, f), d, "normal")
+            specs["w_down"] = ((f, d), f, "normal")
+    return specs
+
+
+_FRONTEND_STUB_DIM = {"vision": 1024, "audio": 512}
+
+
+def top_param_specs(cfg: ModelConfig) -> dict[str, tuple[tuple, int, str]]:
+    d, vp = cfg.d_model, padded_vocab(cfg)
+    specs = {"embed": ((vp, d), d, "normal"), "final_norm": ((d,), 0, "ones")}
+    if cfg.act == "gelu":
+        specs["final_norm_bias"] = ((d,), 0, "zeros")
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ((d, vp), d, "normal")
+    if cfg.frontend:
+        ds = _FRONTEND_STUB_DIM[cfg.frontend]
+        specs["frontend_proj"] = ((ds, d), ds, "normal")
+        specs["frontend_norm"] = ((d,), 0, "ones")
+    return specs
+
+
+def _init_one(key: Array, shape: tuple, fan_in: int, kind: str, dtype) -> Array:
+    if kind == "ones":
+        return jnp.ones(shape, dtype)
+    if kind == "zeros":
+        return jnp.zeros(shape, dtype)
+    if kind == "a_log":
+        # Mamba-2 init: A ~ uniform[1, 16]  =>  store log A.
+        u = jax.random.uniform(key, shape, minval=1.0, maxval=16.0)
+        return jnp.log(u).astype(jnp.float32)          # kept fp32 (state math)
+    if kind == "dt_bias":
+        # dt ~ loguniform[1e-3, 1e-1]; store softplus^{-1}(dt).
+        u = jax.random.uniform(key, shape)
+        dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+        return jnp.log(jnp.expm1(dt)).astype(jnp.float32)
+    return trunc_normal(key, shape, fan_in, dtype)
+
+
+def init_params(key: Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    """Initialize the full parameter pytree (blocks stacked on L)."""
+    lspecs = layer_param_specs(cfg)
+    tspecs = top_param_specs(cfg)
+    keys = jax.random.split(key, len(lspecs) + len(tspecs))
+    params: Params = {"blocks": {}}
+    for (name, (shape, fan, kind)), k in zip(tspecs.items(), keys):
+        params[name] = _init_one(k, shape, fan, kind, dtype)
+    for (name, (shape, fan, kind)), k in zip(
+        lspecs.items(), keys[len(tspecs):]
+    ):
+        stacked = jax.vmap(
+            lambda kk: _init_one(kk, shape, fan, kind, dtype)
+        )(jax.random.split(k, cfg.num_layers))
+        params["blocks"][name] = stacked
+    return params
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact parameter count implied by the specs (== leaves of init_params)."""
+    total = sum(math.prod(s) for s, _, _ in top_param_specs(cfg).values())
+    for name, (shape, _, _) in layer_param_specs(cfg).items():
+        n = math.prod(shape)
+        if active_only and name.startswith("we_"):
+            n = n * cfg.top_k // cfg.num_experts
+        total += n * cfg.num_layers
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _attn_block(lp, h, cfg: ModelConfig, sin, cos, attn_impl: str, q_pos, k_pos):
+    b, s, d = h.shape
+    hd = cfg.resolved_head_dim
+    norm = (
+        layer_norm(h, lp["ln1"], lp["ln1_bias"], cfg.norm_eps)
+        if cfg.act == "gelu"
+        else rms_norm(h, lp["ln1"], cfg.norm_eps)
+    )
+    q = norm @ lp["wq"]
+    k = norm @ lp["wk"]
+    v = norm @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.causal:   # RoPE for decoder LMs; encoder stub uses none (abs emb in stub)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    attend = attend_blockwise if attn_impl == "blockwise" else attend_naive
+    out = attend(
+        q, k, v, q_pos, k_pos, causal=cfg.causal, window=cfg.sliding_window
+    )
+    return out.reshape(b, s, cfg.num_heads * hd) @ lp["wo"], (k, v)
+
+
+def _ssm_block(lp, h, cfg: ModelConfig):
+    """Mamba-2 layer body (training/prefill form).
+
+    Returns (out, final_state, conv_tail) — conv_tail is the last (W-1) raw
+    [x|B|C] projections, i.e. exactly the conv ring state decode_step carries.
+    """
+    b, s, d = h.shape
+    dims = _ssm_dims(cfg)
+    norm = rms_norm(h, lp["ln_ssm"], cfg.norm_eps)
+    di, n, heads = dims["d_inner"], dims["n"], dims["heads"]
+    z = norm @ lp["w_z"]
+    x_raw = norm @ lp["w_x"]
+    b_raw = norm @ lp["w_b"]
+    c_raw = norm @ lp["w_c"]
+    dt_raw = norm @ lp["w_dt"]                       # (B,S,H)
+    conv_tail = jnp.concatenate(
+        [x_raw[:, -(cfg.ssm_conv_width - 1):],
+         b_raw[:, -(cfg.ssm_conv_width - 1):],
+         c_raw[:, -(cfg.ssm_conv_width - 1):]], axis=-1,
+    )
+    x_c = jax.nn.silu(causal_conv(x_raw, lp["conv_x_w"], lp["conv_x_b"]))
+    b_mat = jax.nn.silu(causal_conv(b_raw, lp["conv_b_w"], lp["conv_b_b"]))
+    c_mat = jax.nn.silu(causal_conv(c_raw, lp["conv_c_w"], lp["conv_c_b"]))
+    x_in = x_c.reshape(b, s, heads, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])
+    a = -jnp.exp(lp["a_log"])
+    y, state = ssd_chunked(x_in, dt, a, b_mat, c_mat, min(cfg.ssm_chunk, s))
+    y = y + lp["d_skip"][None, None, :, None].astype(y.dtype) * x_in
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), lp["ssm_norm"], cfg.norm_eps)
+    return y @ lp["ssm_out"], state, conv_tail
+
+
+def _mlp_block(lp, h, cfg: ModelConfig):
+    """Dense or MoE FFN half-block. Returns (out, aux_loss)."""
+    if cfg.is_moe:
+        norm = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        out, aux = moe_ffn(
+            norm, lp["router"], lp["we_gate"], lp["we_up"], lp["we_down"], cfg
+        )
+        if cfg.num_shared_experts:
+            out = out + shared_expert_ffn(
+                norm, lp["ws_gate"], lp["ws_up"], lp["ws_down"]
+            )
+        return out, aux
+    if cfg.d_ff == 0:
+        return jnp.zeros_like(h), jnp.float32(0.0)
+    if cfg.act == "gelu":
+        norm = layer_norm(h, lp["ln2"], lp["ln2_bias"], cfg.norm_eps)
+        return gelu_mlp(norm, lp["w_up"], lp["b_up"], lp["w_down"], lp["b_down"]), jnp.float32(0.0)
+    norm = rms_norm(h, lp["ln2"], cfg.norm_eps)
+    return swiglu(norm, lp["w_gate"], lp["w_up"], lp["w_down"]), jnp.float32(0.0)
+
+
+def _ring_gather(kv: Array, sc: int) -> Array:
+    """(B, S, ...) -> (B, sc, ...) arranged so slot j holds the position p
+    with p % sc == j (ring-buffer layout expected by decode_step).
+
+    Slots with no matching position (sc > S headroom for generation) hold
+    clamped garbage — decode_step masks them out via ``_ring_positions``.
+    """
+    s = kv.shape[1]
+    j = jnp.arange(sc)
+    p = (s - 1) - jnp.mod((s - 1) - j, sc)
+    return jnp.take(kv, jnp.clip(p, 0, s - 1), axis=1)
+
+
+def make_block_fn(
+    cfg: ModelConfig, sin, cos, attn_impl: str, q_pos, k_pos,
+    collect_cache: bool = False, cache_dtype=jnp.bfloat16,
+    cache_capacity: int | None = None,
+):
+    """One transformer block as a scan body: (h, lp) -> (h', ys).
+
+    ys is the aux loss, plus (when ``collect_cache``) this layer's decode
+    cache contribution — stacked by the scan into the (L, ...) cache arrays.
+    """
+
+    def block(h, lp):
+        aux = jnp.float32(0.0)
+        cache_out = {}
+        if cfg.hybrid:
+            attn_out, kv = _attn_block(lp, h, cfg, sin, cos, attn_impl, q_pos, k_pos)
+            ssm_out, state, conv_tail = _ssm_block(lp, h, cfg)
+            mixed = 0.5 * (
+                rms_norm(attn_out, lp["branch_attn_norm"], cfg.norm_eps)
+                + rms_norm(ssm_out, lp["branch_ssm_norm"], cfg.norm_eps)
+            )
+            h = h + mixed
+        elif cfg.has_attention:
+            attn_out, kv = _attn_block(lp, h, cfg, sin, cos, attn_impl, q_pos, k_pos)
+            h = h + attn_out
+        elif cfg.has_ssm:
+            ssm_out, state, conv_tail = _ssm_block(lp, h, cfg)
+            h = h + ssm_out
+        if collect_cache:
+            if cfg.has_attention:
+                sc = cache_len_for(cfg, cache_capacity or h.shape[1])
+                cache_out["k"] = _ring_gather(kv[0], sc).astype(cache_dtype)
+                cache_out["v"] = _ring_gather(kv[1], sc).astype(cache_dtype)
+            if cfg.has_ssm:
+                cache_out["ssm_state"] = state
+                cache_out["conv_state"] = conv_tail.astype(cache_dtype)
+        if cfg.d_ff > 0 or cfg.is_moe:
+            mlp_out, aux = _mlp_block(lp, h, cfg)
+            h = h + mlp_out
+        return h, (aux, cache_out)
+
+    return block
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+_REMAT_POLICIES = {
+    "none": None,
+    "dots": "dots_saveable",
+    "full": "nothing_saveable",
+}
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: Array | None,
+    prefix_embeds: Array | None = None,
+    attn_impl: str = "blockwise",
+    remat: str = "none",
+    collect_cache: bool = False,
+    cache_dtype=jnp.bfloat16,
+    cache_len: int | None = None,
+    unroll_layers: bool = False,
+) -> tuple[Array, Array] | tuple[Array, Array, Params]:
+    """Full-sequence forward. Returns (logits fp32 (B,S,Vp), aux_loss)
+    — plus the assembled decode cache when ``collect_cache`` (prefill).
+
+    ``prefix_embeds``: (B, S_pre, stub_dim) precomputed modality embeddings
+    (vision patches / audio frames) — the frontend STUB mandated by the
+    assignment. For VLM they are prepended to the token embeddings; for the
+    audio encoder they *are* the input (``tokens`` may be None).
+    """
+    h = None if tokens is None else jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend and prefix_embeds is not None:
+        dtype = params["final_norm"].dtype
+        pre = prefix_embeds.astype(dtype) @ params["frontend_proj"]
+        pre = rms_norm(pre, params["frontend_norm"], cfg.norm_eps)
+        h = pre if h is None else jnp.concatenate([pre, h], axis=1)
+    s = h.shape[1]
+    positions = jnp.arange(s)
+    if cfg.has_attention:
+        sin, cos = rope_table(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    else:
+        sin = cos = jnp.zeros((s, 1), jnp.float32)
+    block = make_block_fn(
+        cfg, sin, cos, attn_impl, positions, positions,
+        collect_cache=collect_cache, cache_dtype=cache_dtype,
+        cache_capacity=cache_len,
+    )
+    policy = _REMAT_POLICIES[remat]
+    if policy is not None:
+        block = jax.checkpoint(
+            block, policy=getattr(jax.checkpoint_policies, policy)
+        )
+    elif remat == "full_recompute":
+        block = jax.checkpoint(block)
+    # unroll_layers: used by the dry-run's cost-extraction compiles — XLA's
+    # HloCostAnalysis counts while-loop bodies ONCE regardless of trip count,
+    # so exact FLOP/byte counts require a loop-free graph (DESIGN.md §7).
+    h, (aux, layer_caches) = jax.lax.scan(
+        block, h, params["blocks"], unroll=cfg.num_layers if unroll_layers else 1
+    )
+    h = (
+        layer_norm(h, params["final_norm"], params["final_norm_bias"], cfg.norm_eps)
+        if cfg.act == "gelu"
+        else rms_norm(h, params["final_norm"], cfg.norm_eps)
+    )
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (h @ head.astype(h.dtype)).astype(jnp.float32)
+    if collect_cache:
+        cache = dict(layer_caches)
+        cache["pos"] = jnp.full((logits.shape[0],), s, jnp.int32)
+        return logits, jnp.sum(aux), cache
+    return logits, jnp.sum(aux)
+
+
+def prefill_step(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: Array | None,
+    prefix_embeds: Array | None = None,
+    attn_impl: str = "blockwise",
+    cache_dtype=jnp.bfloat16,
+    cache_len: int | None = None,
+    unroll_layers: bool = False,
+) -> tuple[Array, Params]:
+    """Serving prefill: run the prompt, return (last-token logits, cache).
+
+    ``cache_len``: total KV capacity (prompt + generation headroom);
+    defaults to the prompt length (ring eviction starts immediately).
+    """
+    logits, _, cache = forward(
+        params, cfg, tokens, prefix_embeds=prefix_embeds,
+        attn_impl=attn_impl, collect_cache=True, cache_dtype=cache_dtype,
+        cache_len=cache_len, unroll_layers=unroll_layers,
+    )
+    return logits[:, -1:, :], cache
+
+
+def loss_fn(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict[str, Array],
+    attn_impl: str = "blockwise",
+    remat: str = "none",
+    aux_coef: float = 0.01,
+    z_coef: float = 1e-4,
+    unroll_layers: bool = False,
+) -> tuple[Array, dict[str, Array]]:
+    """Masked next-token cross-entropy + router aux + z-loss."""
+    logits, aux = forward(
+        params, cfg, batch.get("tokens"),
+        prefix_embeds=batch.get("prefix_embeds"),
+        attn_impl=attn_impl, remat=remat, unroll_layers=unroll_layers,
+    )
+    labels = batch["labels"]
+    mask = batch["loss_mask"].astype(jnp.float32)
+    if cfg.frontend == "vision" and batch.get("prefix_embeds") is not None:
+        pre = batch["prefix_embeds"].shape[1]
+        logits = logits[:, pre:, :]
+    vp = logits.shape[-1]
+    # Mask padded vocab columns.
+    col_ok = jnp.arange(vp) < cfg.vocab_size
+    logits = jnp.where(col_ok[None, None, :], logits, -1e30)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce_mean = ce.sum() / denom
+    z_loss = z_coef * ((logz * mask) ** 2).sum() / denom
+    total = ce_mean + z_loss + aux_coef * aux
+    return total, {"ce": ce_mean, "z_loss": z_loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+
+def cache_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window > 0 and cfg.has_attention:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16,
+    prefilled: int = 0,
+) -> Params:
+    """Decode-state pytree. ``prefilled`` marks how many slots are valid."""
+    cache: Params = {"pos": jnp.full((batch,), prefilled, jnp.int32)}
+    sc = cache_len_for(cfg, seq_len)
+    hd = cfg.resolved_head_dim
+    if cfg.has_attention:
+        kv_shape = (cfg.num_layers, batch, sc, cfg.num_kv_heads, hd)
+        cache["k"] = jnp.zeros(kv_shape, dtype)
+        cache["v"] = jnp.zeros(kv_shape, dtype)
+    if cfg.has_ssm:
+        dims = _ssm_dims(cfg)
+        cache["ssm_state"] = jnp.zeros(
+            (cfg.num_layers, batch, dims["heads"], cfg.ssm_head_dim, dims["n"]),
+            jnp.float32,
+        )
+        cache["conv_state"] = jnp.zeros(
+            (cfg.num_layers, batch, cfg.ssm_conv_width - 1, dims["conv_dim"]), dtype
+        )
+    return cache
+
+
+def _ring_positions(pos: Array, sc: int) -> Array:
+    """(B, sc) absolute position held by each ring slot, −1 if unwritten."""
+    j = jnp.arange(sc)
+    last = pos[:, None] - 1
+    p = last - jnp.mod(last - j[None, :], sc)
+    return jnp.where(p >= 0, p, -1)
+
+
+def decode_step(
+    params: Params, cfg: ModelConfig, cache: Params, tokens: Array,
+    unroll_layers: bool = False, uniform_pos: bool = True,
+    kv_shard: str = "heads",
+) -> tuple[Array, Params]:
+    """One serving step.
+
+    ``uniform_pos``: the assigned decode shapes have every sequence at the
+    same cache length, so the ring-slot write can be a single
+    ``dynamic_update_slice`` on the sequence dim — SPMD-partitionable on a
+    batch- or sequence-sharded cache. The per-example scatter path
+    (``uniform_pos=False``) supports ragged continuous batching but forces
+    XLA to all-gather the cache over the model axis (measured: +43 GB/step
+    on granite-3-2b decode_32k — EXPERIMENTS.md §Perf A1).
+    """
+    """One serving step: (B, 1) new tokens -> (B, 1, Vp) fp32 logits + cache."""
+    b = tokens.shape[0]
+    pos = cache["pos"]                                     # (B,)
+    h = jnp.take(params["embed"], tokens, axis=0)          # (B,1,D)
+    hd = cfg.resolved_head_dim
+    if cfg.has_attention:
+        sin, cos = rope_table(pos[:, None], hd, cfg.rope_theta)   # (B,1,half)
+    else:
+        sin = cos = None
+
+    def block(h, xs):
+        lp, layer_cache = xs
+        new_cache = dict(layer_cache)
+        if cfg.hybrid or cfg.has_attention:
+            if cfg.has_attention:
+                sc = layer_cache["k"].shape[1]
+                norm = (
+                    layer_norm(h, lp["ln1"], lp["ln1_bias"], cfg.norm_eps)
+                    if cfg.act == "gelu" else rms_norm(h, lp["ln1"], cfg.norm_eps)
+                )
+                q = norm @ lp["wq"]
+                k = norm @ lp["wk"]
+                v = norm @ lp["wv"]
+                if cfg.qkv_bias:
+                    q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+                q = q.reshape(b, 1, cfg.num_heads, hd)
+                k = k.reshape(b, 1, cfg.num_kv_heads, hd)
+                v = v.reshape(b, 1, cfg.num_kv_heads, hd)
+                q = apply_rope(q, sin, cos)
+                k = apply_rope(k, sin, cos)
+                if uniform_pos:
+                    slot0 = jnp.mod(pos[0], sc)
+                    k_cache = jax.lax.dynamic_update_slice(
+                        layer_cache["k"], k.astype(layer_cache["k"].dtype),
+                        (0, slot0, 0, 0),
+                    )
+                    v_cache = jax.lax.dynamic_update_slice(
+                        layer_cache["v"], v.astype(layer_cache["v"].dtype),
+                        (0, slot0, 0, 0),
+                    )
+                else:
+                    slot = jnp.mod(pos, sc)                 # (B,)
+                    bi = jnp.arange(b)
+                    k_cache = layer_cache["k"].at[bi, slot].set(k[:, 0].astype(layer_cache["k"].dtype))
+                    v_cache = layer_cache["v"].at[bi, slot].set(v[:, 0].astype(layer_cache["v"].dtype))
+                cache_pos = _ring_positions(pos + 1, sc)
+                attn_out = attend_decode(
+                    q, k_cache, v_cache, pos, cache_pos,
+                    window=cfg.sliding_window,
+                    seq_sharded=(kv_shard == "seq"),
+                )
+                attn_out = attn_out.reshape(b, 1, cfg.num_heads * hd) @ lp["wo"]
+                new_cache["k"], new_cache["v"] = k_cache, v_cache
+        if cfg.hybrid or cfg.has_ssm:
+            if cfg.has_ssm:
+                dims = _ssm_dims(cfg)
+                di, n, heads = dims["d_inner"], dims["n"], dims["heads"]
+                norm_s = rms_norm(h, lp["ln_ssm"], cfg.norm_eps)
+                ns = norm_s[:, 0]                          # (B, D)
+                z = ns @ lp["w_z"]
+                x_raw = ns @ lp["w_x"]
+                b_raw = ns @ lp["w_b"]
+                c_raw = ns @ lp["w_c"]
+                dt_raw = ns @ lp["w_dt"]
+                xbc = jnp.concatenate([x_raw, b_raw, c_raw], axis=-1)
+                conv_w = jnp.concatenate(
+                    [lp["conv_x_w"], lp["conv_b_w"], lp["conv_c_w"]], axis=-1
+                )
+                conv_b = jnp.concatenate(
+                    [lp["conv_x_b"], lp["conv_b_b"], lp["conv_c_b"]], axis=-1
+                )
+                conv_out, conv_state = causal_conv_update(
+                    layer_cache["conv_state"], xbc, conv_w, conv_b
+                )
+                xbc = jax.nn.silu(conv_out)
+                x_in = xbc[:, :di].reshape(b, heads, cfg.ssm_head_dim)
+                b_vec = xbc[:, di : di + n]
+                c_vec = xbc[:, di + n :]
+                dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])
+                a = -jnp.exp(lp["a_log"])
+                y, state = ssd_step(x_in, dt, a, b_vec, c_vec, layer_cache["ssm_state"])
+                y = y + lp["d_skip"][None, :, None].astype(y.dtype) * x_in
+                y = y.reshape(b, 1, di)
+                y = rms_norm(y * jax.nn.silu(z[:, None, :]), lp["ssm_norm"], cfg.norm_eps)
+                ssm_out = y @ lp["ssm_out"]
+                new_cache["ssm_state"], new_cache["conv_state"] = state, conv_state
+        if cfg.hybrid:
+            h = h + 0.5 * (
+                rms_norm(attn_out, lp["branch_attn_norm"], cfg.norm_eps)
+                + rms_norm(ssm_out, lp["branch_ssm_norm"], cfg.norm_eps)
+            )
+        elif cfg.has_attention:
+            h = h + attn_out
+        else:
+            h = h + ssm_out
+        if cfg.d_ff > 0 or cfg.is_moe:
+            mlp_out, _ = _mlp_block(lp, h, cfg)
+            h = h + mlp_out
+        return h, new_cache
+
+    layer_caches = {
+        k: v for k, v in cache.items() if k not in ("pos",)
+    }
+    h, new_layer_caches = jax.lax.scan(
+        block, h, (params["blocks"], layer_caches),
+        unroll=cfg.num_layers if unroll_layers else 1,
+    )
+    h = (
+        layer_norm(h, params["final_norm"], params["final_norm_bias"], cfg.norm_eps)
+        if cfg.act == "gelu"
+        else rms_norm(h, params["final_norm"], cfg.norm_eps)
+    )
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (h @ head.astype(h.dtype)).astype(jnp.float32)
+    new_cache = dict(new_layer_caches)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,136 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked scan + one-step decode.
+
+The SSD forward computes, per head h with state (P, N):
+
+    h_t = exp(A_h * dt_t) * h_{t-1} + dt_t * (x_t  outer  B_t)
+    y_t = h_t @ C_t + D_h * x_t
+
+The chunked algorithm (Mamba-2 paper, Sec. 6) splits the sequence into
+chunks of length Q: a dense "attention-form" intra-chunk term, a per-chunk
+state contraction, an inter-chunk recurrence (lax.scan), and a state
+broadcast back into each chunk. State math runs in fp32.
+
+This file is the *reference/pure-JAX* path; ``repro.kernels.ssd_scan`` holds
+the Pallas TPU kernel with the same chunk structure (validated against
+:func:`ssd_chunked` in interpret mode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+def ssd_chunked(
+    x: Array,       # (B, S, H, P)  inputs per head
+    dt: Array,      # (B, S, H)     softplus'd step sizes
+    a: Array,       # (H,)          negative decay rates (A = -exp(A_log))
+    b_mat: Array,   # (B, S, N)     input projections (G=1 group)
+    c_mat: Array,   # (B, S, N)     output projections
+    chunk: int,
+    h0: Array | None = None,   # (B, H, P, N) initial state
+) -> tuple[Array, Array]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        # Zero-dt padding steps are exact no-ops for the recurrence
+        # (decay exp(0)=1, zero state update, outputs discarded).
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        s_padded = s + pad
+    else:
+        s_padded = s
+    nc = s_padded // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+
+    adt = dtc * a.astype(jnp.float32)                     # (B,NC,Q,H) (negative)
+    cum = jnp.cumsum(adt, axis=2)                         # inclusive cumsum
+    # Intra-chunk "attention" weights: L[t, s_] = exp(cum_t - cum_s) for t >= s_.
+    # Mask BEFORE exp: the upper triangle has positive exponents that overflow,
+    # and 0*inf = NaN in the backward pass if exp'd first.
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,NC,Q,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    l_mat = jnp.exp(jnp.where(tri[None, None, :, :, None], seg, -jnp.inf))
+    cb = jnp.einsum("bcqn,bcsn->bcqs", cc.astype(jnp.float32), bc.astype(jnp.float32))
+    w_intra = cb[..., None] * l_mat * dtc[:, :, None, :, :]      # (B,NC,Q,S=Q,H)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", w_intra, xc.astype(jnp.float32))
+
+    # Per-chunk state contribution: sum_s exp(cum_Q - cum_s) * dt_s * x_s ⊗ B_s.
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,NC,Q,H)
+    states = jnp.einsum(
+        "bcqh,bcqhp,bcqn->bchpn",
+        decay_out * dtc, xc.astype(jnp.float32), bc.astype(jnp.float32),
+    )                                                     # (B,NC,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,NC,H)
+
+    def inter(hprev, xs):
+        st, dec = xs                                      # (B,H,P,N), (B,H)
+        hnext = dec[:, :, None, None] * hprev + st
+        return hnext, hprev                               # emit state *entering* chunk
+
+    h_init = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if h0 is None else h0.astype(jnp.float32)
+    )
+    h_last, h_in = jax.lax.scan(
+        inter, h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                  # (B,NC,H,P,N)
+
+    # Inter-chunk output: y_t += exp(cum_t) * C_t @ h_in.
+    y_inter = jnp.einsum(
+        "bcqn,bchpn->bcqhp", cc.astype(jnp.float32), h_in
+    ) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, s_padded, h, p)[:, :s].astype(x.dtype)
+    return y, h_last
+
+
+def ssd_step(
+    x: Array,       # (B, H, P)
+    dt: Array,      # (B, H)
+    a: Array,       # (H,)
+    b_vec: Array,   # (B, N)
+    c_vec: Array,   # (B, N)
+    state: Array,   # (B, H, P, N) fp32
+) -> tuple[Array, Array]:
+    """One decode step of the SSD recurrence. Returns (y (B,H,P), new_state)."""
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * a.astype(jnp.float32))          # (B, H)
+    upd = jnp.einsum(
+        "bh,bhp,bn->bhpn", dtf, x.astype(jnp.float32), b_vec.astype(jnp.float32)
+    )
+    new_state = decay[:, :, None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c_vec.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+def causal_conv_update(
+    conv_state: Array,   # (B, W-1, C) previous inputs
+    new: Array,          # (B, C) current input
+    w: Array,            # (W, C) depthwise filter
+    b: Array,            # (C,)
+) -> tuple[Array, Array]:
+    """Depthwise causal conv, single step. Returns (out (B,C), new_state)."""
+    window = jnp.concatenate([conv_state, new[:, None, :]], axis=1)   # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", window, w) + b
+    return out, window[:, 1:, :]
+
+
+def causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over (B, S, C) with filter (W, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    windows = jnp.stack(
+        [xp[:, i : i + x.shape[1], :] for i in range(width)], axis=2
+    )                                                     # (B, S, W, C)
+    return jnp.einsum("bswc,wc->bsc", windows, w) + b

@@ -1,0 +1,13 @@
+"""repro.serve — serving runtime: sharded prefill/decode steps + the
+GMSA-dispatched continuous-batching fleet engine."""
+
+from repro.serve.step import make_decode_step, make_prefill_step
+from repro.serve.engine import FleetEngine, FleetConfig, RequestClass
+
+__all__ = [
+    "make_decode_step",
+    "make_prefill_step",
+    "FleetEngine",
+    "FleetConfig",
+    "RequestClass",
+]

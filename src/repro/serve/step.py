@@ -1,0 +1,78 @@
+"""Sharded serving steps (prefill + decode) for any (arch × mesh).
+
+Decode shapes in the assignment ("decode_32k", "long_500k") lower
+``serve_step`` — one new token against a KV/state cache of ``seq_len`` —
+NOT ``train_step``. The cache is sharded batch×("pod","data") and
+heads×"model"; for batch=1 long-context cells the batch axes fall back to
+replication (the cell is latency-bound; recorded in the roofline notes).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    logits_pspec,
+    param_pspecs,
+)
+from repro.models.lm import decode_step, prefill_step
+
+
+def make_decode_step(
+    cfg: ModelConfig, mesh: Mesh, unroll_layers: bool = False,
+    uniform_pos: bool = True, kv_shard: str = "auto",
+):
+    """Returns (fn, shardings_for) for the single-token decode step."""
+    pspecs = param_pspecs(cfg, mesh)
+    from repro.distributed.sharding import resolve_kv_shard
+    if kv_shard == "auto":
+        kv_shard = resolve_kv_shard(cfg, mesh)
+
+    def fn(params, cache, tokens):
+        return decode_step(
+            params, cfg, cache, tokens,
+            unroll_layers=unroll_layers, uniform_pos=uniform_pos,
+            kv_shard=kv_shard,
+        )
+
+    def shardings_for(cache_tree, batch_size: int):
+        ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+        cspecs = cache_pspecs(cache_tree, cfg, mesh, batch_size, kv_shard=kv_shard)
+        tok_spec = batch_pspecs({"t": jax.ShapeDtypeStruct((batch_size, 1), "int32")},
+                                mesh, batch_size)["t"]
+        in_shardings = (ns(pspecs), ns(cspecs), NamedSharding(mesh, tok_spec))
+        out_shardings = (
+            NamedSharding(mesh, logits_pspec(cfg, mesh, batch_size)),
+            ns(cspecs),
+        )
+        return in_shardings, out_shardings
+
+    return fn, pspecs, shardings_for
+
+
+def make_prefill_step(
+    cfg: ModelConfig, mesh: Mesh, attn_impl: str = "blockwise",
+    unroll_layers: bool = False,
+):
+    """Returns (fn, shardings_for) for the prompt-prefill step."""
+    pspecs = param_pspecs(cfg, mesh)
+
+    def fn(params, **batch):
+        return prefill_step(
+            params, cfg,
+            batch.get("tokens"),
+            prefix_embeds=batch.get("prefix_embeds"),
+            attn_impl=attn_impl,
+            unroll_layers=unroll_layers,
+        )
+
+    def shardings_for(batch_tree, batch_size: int):
+        ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+        bspecs = batch_pspecs(batch_tree, mesh, batch_size)
+        return ns(pspecs), ns(bspecs)
+
+    return fn, pspecs, shardings_for

@@ -1,0 +1,32 @@
+"""repro.traces — trace pipelines for the GDA control plane and LM training.
+
+Control-plane traces (paper Sec. V-A experimental setup):
+    * :mod:`repro.traces.arrivals`  — Poisson job arrivals (350K jobs/month).
+    * :mod:`repro.traces.price`     — diurnal electricity-price synthesizers
+      calibrated to the four Facebook DC regions, CSV-loadable for real data.
+    * :mod:`repro.traces.pue`       — PUE traces (Facebook dashboard-like).
+    * :mod:`repro.traces.bandwidth` — inter-site up/down bandwidths (100 Mb/s–2 Gb/s).
+    * :mod:`repro.traces.datasets`  — per-type dataset distributions & service rates.
+
+Training-data pipeline (used by repro.train):
+    * :mod:`repro.traces.tokens`    — deterministic synthetic token corpus,
+      sequence packing, host-sharded batch loader with prefetch.
+"""
+
+from repro.traces.arrivals import poisson_arrivals, FACEBOOK_MONTHLY_JOBS
+from repro.traces.price import price_trace, SiteSpec, FACEBOOK_SITES
+from repro.traces.pue import pue_trace
+from repro.traces.bandwidth import bandwidth_draw
+from repro.traces.datasets import dataset_distribution, service_rate_trace
+
+__all__ = [
+    "poisson_arrivals",
+    "FACEBOOK_MONTHLY_JOBS",
+    "price_trace",
+    "SiteSpec",
+    "FACEBOOK_SITES",
+    "pue_trace",
+    "bandwidth_draw",
+    "dataset_distribution",
+    "service_rate_trace",
+]

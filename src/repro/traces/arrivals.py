@@ -1,0 +1,103 @@
+"""Job-arrival traces (paper Sec. V-A).
+
+The paper drives its evaluation with the production rate of Facebook's Hadoop
+cluster — 350K jobs/month — and models slot-level arrivals as Poisson, citing
+the measurement study that validated the Poisson assumption.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+#: Facebook Hadoop production trace rate used by the paper.
+FACEBOOK_MONTHLY_JOBS = 350_000
+
+#: Minutes per month used to convert the monthly rate (30-day month).
+_MINUTES_PER_MONTH = 30 * 24 * 60
+
+
+def rate_per_slot(slot_minutes: float, monthly_jobs: float = FACEBOOK_MONTHLY_JOBS) -> float:
+    """Poisson rate per slot for a given slot length (paper: 5-minute slots)."""
+    return monthly_jobs * slot_minutes / _MINUTES_PER_MONTH
+
+
+def poisson_arrivals(
+    key: Array,
+    t_slots: int,
+    k_types: int,
+    lam: float | Array,
+    a_max: float | None = None,
+) -> Array:
+    """(T, K) Poisson arrival counts, optionally truncated at A_max.
+
+    The paper assumes a finite A^k_max exists; truncation (rare for the
+    defaults: P[X > 3*lam] ~ 1e-9) enforces it so the Lemma-1 constant B is
+    finite and testable.
+    """
+    lam_arr = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (k_types,))
+    draws = jax.random.poisson(key, lam_arr, (t_slots, k_types)).astype(jnp.float32)
+    if a_max is not None:
+        draws = jnp.minimum(draws, a_max)
+    return draws
+
+
+# ---------------------------------------------------------------------------
+# Fast exact Poisson via inverse-CDF tables (EXPERIMENTS.md §Perf v4).
+#
+# jax.random.poisson's transformed-rejection sampler dominated the Monte-
+# Carlo engine's wall time (~97%). The rates here are STATIC per
+# configuration, so inverse-CDF sampling from a precomputed table is exact
+# (the distribution is already truncated at A_max by the model) and turns
+# 1.4M rejection loops into one vectorized searchsorted.
+# ---------------------------------------------------------------------------
+
+def poisson_table(lam, max_value: int) -> np.ndarray:
+    """(..., max_value+1) float32 CDF table(s) for static rate(s) ``lam``.
+
+    Computed in float64 numpy at trace-build time (outside jit).
+    """
+    import scipy.special
+
+    lam = np.asarray(lam, np.float64)[..., None]            # (..., 1)
+    k = np.arange(max_value + 1, dtype=np.float64)
+    logpmf = k * np.log(np.maximum(lam, 1e-300)) - lam - scipy.special.gammaln(k + 1)
+    cdf = np.cumsum(np.exp(logpmf), axis=-1)
+    cdf = cdf / cdf[..., -1:]                                # renormalize truncation
+    return cdf.astype(np.float32)
+
+
+def poisson_from_table(key: Array, cdf: Array, shape: tuple) -> Array:
+    """Exact truncated-Poisson draws via inverse CDF (binary search).
+
+    Args:
+        key: PRNG key.
+        cdf: (..., M+1) tables; leading dims must equal ``shape``'s trailing
+            dims (e.g. cdf (N, K, M+1) with shape (T, N, K)).
+        shape: output shape (leading axis = time/slot axis).
+    Returns: float32 counts in [0, M].
+
+    §Perf v5: ``searchsorted`` (7 binary-search steps) instead of a full
+    (M+1)-wide compare+sum — the compare materialized a (T, N, K, M+1) bool
+    tensor that dominated Monte-Carlo wall time.
+    """
+    u = jax.random.uniform(key, shape)
+    batch_dims = cdf.shape[:-1]
+    m1 = cdf.shape[-1]
+    if batch_dims == ():
+        return jnp.searchsorted(cdf, u, side="left").astype(jnp.float32)
+    # Flatten table batch; move the time axis last so each table binary-
+    # searches its own draw vector.
+    t_axes = len(shape) - len(batch_dims)
+    cdf_flat = cdf.reshape(-1, m1)                              # (B, M+1)
+    u_moved = jnp.moveaxis(
+        u.reshape(shape[:t_axes] + (-1,)), -1, 0
+    ).reshape(-1, *shape[:t_axes])                              # (B, T...)
+    out = jax.vmap(lambda c, uu: jnp.searchsorted(c, uu, side="left"))(
+        cdf_flat, u_moved.reshape(cdf_flat.shape[0], -1)
+    )                                                           # (B, prod(T))
+    out = out.reshape((-1,) + shape[:t_axes])                   # (B, T...)
+    out = jnp.moveaxis(out, 0, -1).reshape(shape)
+    return out.astype(jnp.float32)

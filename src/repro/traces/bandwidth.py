@@ -1,0 +1,50 @@
+"""Inter-site bandwidth traces (paper Sec. V-A: 100 Mb/s – 2 Gb/s).
+
+The paper varies core-network<->site bandwidths uniformly in [100 Mb/s, 2 Gb/s]
+(per Iridium's setup). Bandwidths feed the Iridium placement layer
+(:mod:`repro.core.iridium`) and the service-rate model
+(:mod:`repro.traces.datasets`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+#: Paper's bandwidth range, in Gb/s.
+BW_MIN_GBPS = 0.1
+BW_MAX_GBPS = 2.0
+
+
+def bandwidth_draw(
+    key: Array,
+    n_sites: int,
+    lo: float = BW_MIN_GBPS,
+    hi: float = BW_MAX_GBPS,
+) -> tuple[Array, Array]:
+    """Draw static (up, down) bandwidths per site, uniform in [lo, hi] Gb/s."""
+    k_up, k_down = jax.random.split(key)
+    up = jax.random.uniform(k_up, (n_sites,), minval=lo, maxval=hi)
+    down = jax.random.uniform(k_down, (n_sites,), minval=lo, maxval=hi)
+    return up, down
+
+
+def bandwidth_trace(
+    key: Array,
+    t_slots: int,
+    n_sites: int,
+    lo: float = BW_MIN_GBPS,
+    hi: float = BW_MAX_GBPS,
+    wobble: float = 0.15,
+) -> tuple[Array, Array]:
+    """Time-varying bandwidths: static draw modulated by bounded noise.
+
+    Models "other applications sharing the same links" (paper Sec. II):
+    available bandwidth wobbles by ±``wobble`` around the provisioned value.
+    """
+    k_static, k_up, k_down = jax.random.split(key, 3)
+    up0, down0 = bandwidth_draw(k_static, n_sites, lo, hi)
+    u = 1.0 + wobble * (2.0 * jax.random.uniform(k_up, (t_slots, n_sites)) - 1.0)
+    d = 1.0 + wobble * (2.0 * jax.random.uniform(k_down, (t_slots, n_sites)) - 1.0)
+    return up0[None, :] * u, down0[None, :] * d

@@ -1,0 +1,13 @@
+"""repro.train — optimizer, distributed train step, training loop."""
+
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from repro.train.step import TrainStepConfig, make_train_step
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_lr",
+    "TrainStepConfig",
+    "make_train_step",
+]

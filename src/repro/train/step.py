@@ -1,0 +1,163 @@
+"""Distributed train-step builder.
+
+Produces a jitted SPMD train step for any (arch × mesh) with:
+
+* microbatch gradient accumulation (``lax.scan`` over microbatches — the
+  standard way to hold global batch at 256×4k tokens within HBM);
+* activation checkpointing (remat policy: none | dots | full);
+* bf16 compute / fp32 optimizer moments;
+* gradient sync in one of two modes:
+    - "native": XLA's fused all-reduce over ("pod","data") — the baseline;
+    - "int8":   within-pod native all-reduce + int8-compressed cross-pod
+      reduce (repro.distributed.compression) with error feedback — the
+      WAN-tier optimization matching the paper's heterogeneous core network.
+
+The returned step has signature
+    step(params, opt_state, batch, error_fb) -> (params, opt_state, metrics, error_fb)
+and is lowered by the dry-run via ``.lower(**input_specs)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.compression import sync_tree
+from repro.distributed.sharding import batch_pspecs, param_pspecs
+from repro.models.lm import loss_fn
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    microbatches: int = 1            # grad-accumulation steps per global step
+    remat: str = "dots"              # none | dots | full
+    attn_impl: str = "blockwise"
+    grad_sync: str = "native"        # native | int8
+    unroll_layers: bool = False      # dry-run cost-extraction only
+    optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B/n, ...) for the accumulation scan."""
+    return jax.tree.map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch
+    )
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, tcfg: TrainStepConfig):
+    """Build the jitted SPMD train step plus its in/out shardings."""
+    pspecs = param_pspecs(cfg, mesh)
+    opt_specs = {"m": pspecs, "v": pspecs, "step": P()}
+
+    def grad_fn(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(
+                p, cfg, batch, attn_impl=tcfg.attn_impl, remat=tcfg.remat,
+                unroll_layers=tcfg.unroll_layers,
+            ),
+            has_aux=True,
+        )(params)
+        return loss, metrics, grads
+
+    def accumulate(params, batch):
+        """Microbatched gradients (mean over microbatches)."""
+        if tcfg.microbatches == 1:
+            return grad_fn(params, batch)
+        mb = _split_microbatches(batch, tcfg.microbatches)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, one):
+            loss, metrics, grads = grad_fn(params, one)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return acc, (loss, metrics)
+
+        acc, (losses, metricses) = jax.lax.scan(body, zero, mb)
+        grads = jax.tree.map(lambda a: a / tcfg.microbatches, acc)
+        loss = jnp.mean(losses)
+        metrics = jax.tree.map(jnp.mean, metricses)
+        return loss, metrics, grads
+
+    multi_pod = "pod" in mesh.shape
+    metric_keys = ("ce", "z_loss", "aux")
+
+    if tcfg.grad_sync == "int8" and multi_pod:
+        n_pods = mesh.shape["pod"]
+
+        def step(params, opt_state, batch, error_fb):
+            # Manual over "pod": per-pod partial grads, compressed WAN sync.
+            # error_fb leaves carry a leading (n_pods,) axis — residuals are
+            # genuinely per-pod state.
+            def pod_local(params, batch, error_fb):
+                loss, metrics, grads = accumulate(params, batch)
+                efb_local = jax.tree.map(lambda e: e[0], error_fb)
+                grads, resid = sync_tree(grads, n_pods, "pod", efb_local)
+                loss = jax.lax.pmean(loss, "pod")
+                metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"), metrics)
+                resid = jax.tree.map(lambda r: r[None], resid)
+                return loss, metrics, grads, resid
+
+            pspec_rep = jax.tree.map(lambda _: P(), params)
+            loss, metrics, grads, resid = jax.shard_map(
+                pod_local,
+                mesh=mesh,
+                in_specs=(
+                    pspec_rep,
+                    jax.tree.map(lambda _: P("pod"), batch),
+                    jax.tree.map(lambda _: P("pod"), error_fb),
+                ),
+                out_specs=(
+                    P(),
+                    {k: P() for k in metric_keys},
+                    pspec_rep,
+                    jax.tree.map(lambda _: P("pod"), error_fb),
+                ),
+                axis_names={"pod"},
+                check_vma=False,
+            )(params, batch, error_fb)
+            new_params, new_opt, opt_metrics = adamw_update(
+                tcfg.optimizer, params, grads, opt_state
+            )
+            metrics = dict(metrics, loss=loss, **opt_metrics)
+            return new_params, new_opt, metrics, resid
+
+    else:
+
+        def step(params, opt_state, batch, error_fb):
+            loss, metrics, grads = accumulate(params, batch)
+            new_params, new_opt, opt_metrics = adamw_update(
+                tcfg.optimizer, params, grads, opt_state
+            )
+            metrics = dict(metrics, loss=loss, **opt_metrics)
+            return new_params, new_opt, metrics, error_fb
+
+    def efb_pspecs():
+        """Error-feedback sharding: leading pod axis in int8 mode; scalar
+        placeholders (replicated) in native mode."""
+        if tcfg.grad_sync == "int8" and multi_pod:
+            return jax.tree.map(
+                lambda s: P("pod", *s), param_pspecs(cfg, mesh)
+            )
+        return jax.tree.map(lambda _: P(), pspecs)
+
+    def init_error_fb(params):
+        if tcfg.grad_sync == "int8" and multi_pod:
+            n_pods = mesh.shape["pod"]
+            return jax.tree.map(
+                lambda p: jnp.zeros((n_pods,) + p.shape, jnp.float32), params
+            )
+        return jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params)
+
+    def shardings_for(batch_tree, batch_size: int):
+        bspecs = batch_pspecs(batch_tree, mesh, batch_size)
+        ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+        in_shardings = (ns(pspecs), ns(opt_specs), ns(bspecs), ns(efb_pspecs()))
+        out_shardings = (ns(pspecs), ns(opt_specs), None, ns(efb_pspecs()))
+        return in_shardings, out_shardings
+
+    return step, pspecs, opt_specs, shardings_for, init_error_fb

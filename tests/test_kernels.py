@@ -1,0 +1,116 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode — executes kernel bodies in Python on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.gmsa_score import gmsa_score, gmsa_score_ref
+from repro.kernels.ssd_scan import ssd_scan, ssd_scan_ref
+from repro.models.ssm import ssd_chunked
+
+
+# ---------------------------------------------------------------------------
+# gmsa_score
+# ---------------------------------------------------------------------------
+
+def _gmsa_inputs(key, k, n, dtype):
+    ks = jax.random.split(key, 6)
+    return (
+        (jax.random.uniform(ks[0], (k, n)) * 100).astype(dtype),
+        (jax.random.uniform(ks[1], (k, n)) * 50).astype(dtype),
+        (jax.random.uniform(ks[2], (k,)) * 40).astype(dtype),
+        (jax.random.uniform(ks[3], (k,)) * 10).astype(dtype),
+        jax.random.dirichlet(ks[4], jnp.ones(n), (k, n)).astype(dtype),
+        (jax.random.uniform(ks[5], (n,)) * 20).astype(dtype),
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("k,n", [(1, 4), (4, 17), (8, 128), (9, 129), (16, 256)])
+def test_gmsa_score_matches_ref(k, n, dtype):
+    q, mu, a, vp, r, wpue = _gmsa_inputs(jax.random.key(k * 1000 + n), k, n, dtype)
+    s_ref, b_ref = gmsa_score_ref(q, mu, a, vp, r, wpue)
+    s, b = gmsa_score(q, mu, a, vp, r, wpue, interpret=True)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(s, s_ref, rtol=tol, atol=tol)
+    # argmin is a discrete boundary: equal iff no near-tie at tolerance.
+    gap = np.partition(np.asarray(s_ref, np.float64), 1, axis=1)
+    near_tie = (gap[:, 1] - gap[:, 0]) < 1e-2 * np.abs(gap[:, 0])
+    agree = np.asarray(b) == np.asarray(b_ref)
+    assert np.all(agree | near_tie)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(1, 24),
+    n=st.integers(2, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gmsa_score_property(k, n, seed):
+    """Property: kernel argmin always indexes a true row minimum."""
+    q, mu, a, vp, r, wpue = _gmsa_inputs(jax.random.key(seed), k, n, jnp.float32)
+    s_ref, _ = gmsa_score_ref(q, mu, a, vp, r, wpue)
+    s, b = gmsa_score(q, mu, a, vp, r, wpue, interpret=True)
+    picked = np.asarray(s_ref)[np.arange(k), np.asarray(b)]
+    best = np.min(np.asarray(s_ref), axis=1)
+    np.testing.assert_allclose(picked, best, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+def _ssd_inputs(key, b, s, h, p, n, dtype):
+    ks = jax.random.split(key, 5)
+    return (
+        jax.random.normal(ks[0], (b, s, h, p)).astype(dtype),
+        jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))).astype(dtype),
+        -jnp.exp(jax.random.normal(ks[2], (h,))),
+        jax.random.normal(ks[3], (b, s, n)).astype(dtype),
+        jax.random.normal(ks[4], (b, s, n)).astype(dtype),
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,p,n,chunk",
+    [(1, 32, 2, 8, 16, 8), (2, 128, 3, 64, 128, 128), (1, 72, 2, 32, 64, 16)],
+)
+def test_ssd_scan_matches_ref(b, s, h, p, n, chunk, dtype):
+    x, dt, a, bm, cm = _ssd_inputs(jax.random.key(b + s), b, s, h, p, n, dtype)
+    y_ref, h_ref = ssd_scan_ref(x, dt, a, bm, cm)
+    y, hf = ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    tol = 3e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32), rtol=tol, atol=tol
+    )
+    np.testing.assert_allclose(hf, h_ref, rtol=tol, atol=tol)
+
+
+def test_ssd_scan_matches_model_path():
+    """Kernel == the model's chunked pure-JAX path (third formulation)."""
+    b, s, h, p, n = 2, 64, 2, 16, 32
+    x, dt, a, bm, cm = _ssd_inputs(jax.random.key(7), b, s, h, p, n, jnp.float32)
+    y_kernel, h_kernel = ssd_scan(x, dt, a, bm, cm, chunk=16, interpret=True)
+    y_model, h_model = ssd_chunked(x, dt, a, bm, cm, 16)
+    np.testing.assert_allclose(y_kernel, y_model, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h_kernel, h_model, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.integers(4, 96),
+    chunk=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ssd_scan_chunk_invariance(s, chunk, seed):
+    """Property: the result must not depend on the chunk size."""
+    b, h, p, n = 1, 2, 8, 16
+    x, dt, a, bm, cm = _ssd_inputs(jax.random.key(seed), b, s, h, p, n, jnp.float32)
+    y1, h1 = ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    y2, h2 = ssd_scan(x, dt, a, bm, cm, chunk=s, interpret=True)
+    np.testing.assert_allclose(y1, y2, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(h1, h2, rtol=3e-4, atol=3e-4)

@@ -1,0 +1,127 @@
+"""Hypothesis property tests on the system's control-plane invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.energy import manager_energy_cost, slot_cost
+from repro.core.gmsa import gmsa_dispatch, lyapunov_drift_bound_B
+from repro.core.iridium import iridium_reduce_placement
+from repro.core.queues import lyapunov, queue_step
+from repro.core.baselines import random_dispatch
+
+
+small = st.floats(0, 100, allow_nan=False, width=32)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(1, 8), k=st.integers(1, 5), seed=st.integers(0, 2**31 - 1),
+)
+def test_queue_law_invariants(n, k, seed):
+    """Eq.(1): non-negativity and the one-slot growth bound."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.uniform(0, 100, (n, k)), jnp.float32)
+    f = jnp.asarray(rng.dirichlet(np.ones(n), k).T, jnp.float32)
+    a = jnp.asarray(rng.uniform(0, 50, k), jnp.float32)
+    mu = jnp.asarray(rng.uniform(0, 50, (n, k)), jnp.float32)
+    q2 = queue_step(q, f, a, mu)
+    assert bool(jnp.all(q2 >= 0))
+    # |Q(t+1) - Q(t)| <= max(arrival, service) elementwise
+    assert bool(jnp.all(q2 <= q + f * a[None, :]))
+    assert bool(jnp.all(q2 >= q - mu))
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 8), k=st.integers(1, 5), seed=st.integers(0, 2**31 - 1),
+       v=st.floats(0, 1000, allow_nan=False))
+def test_gmsa_minimizes_among_onehots(n, k, seed, v):
+    """The GMSA vertex beats every other one-hot dispatch (exact LP opt)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.uniform(0, 200, (n, k)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0, 60, k), jnp.float32)
+    mu = jnp.asarray(rng.uniform(0, 40, (n, k)), jnp.float32)
+    e = jnp.asarray(rng.uniform(5, 30, (k, n)), jnp.float32)
+    from repro.core.gmsa import lp_objective
+    f_star = gmsa_dispatch(q, a, mu, e, v)
+    best = float(lp_objective(f_star, q, a, mu, e, v))
+    for i in range(n):
+        f_alt = jnp.zeros((n, k)).at[i, :].set(1.0)
+        assert best <= float(lp_objective(f_alt, q, a, mu, e, v)) + 1e-2
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 6), k=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_cost_nonnegative_and_linear(n, k, seed):
+    rng = np.random.default_rng(seed)
+    omega = jnp.asarray(rng.uniform(5, 30, n), jnp.float32)
+    pue = jnp.asarray(rng.uniform(1.0, 1.2, n), jnp.float32)
+    r = jnp.asarray(rng.dirichlet(np.ones(n), (k, n)), jnp.float32)
+    p = jnp.asarray(rng.uniform(0.1, 3, k), jnp.float32)
+    e = manager_energy_cost(omega, pue, r, p)
+    assert bool(jnp.all(e > 0))
+    f = jnp.asarray(rng.dirichlet(np.ones(n), k).T, jnp.float32)
+    a = jnp.asarray(rng.uniform(0, 50, k), jnp.float32)
+    c1 = slot_cost(f, a, e)
+    c2 = slot_cost(f, 2 * a, e)
+    np.testing.assert_allclose(2 * float(c1), float(c2), rtol=1e-5)
+    assert float(c1) >= 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 6), seed=st.integers(0, 2**31 - 1),
+       size=st.floats(0.1, 100))
+def test_iridium_placement_feasible_and_bottleneck(n, seed, size):
+    """Placement lies in the simplex and achieves the bisection bottleneck."""
+    rng = np.random.default_rng(seed)
+    d = rng.dirichlet(np.ones(n)).astype(np.float32)
+    up = rng.uniform(0.1, 2.0, n).astype(np.float32)
+    down = rng.uniform(0.1, 2.0, n).astype(np.float32)
+    r, z = iridium_reduce_placement(jnp.asarray(d), jnp.asarray(up),
+                                    jnp.asarray(down), size)
+    r = np.asarray(r)
+    np.testing.assert_allclose(r.sum(), 1.0, atol=1e-4)
+    assert np.all(r >= -1e-6)
+    t_up = (1 - r) * d * size / up
+    t_down = r * (1 - d) * size / down
+    achieved = max(t_up.max(), t_down.max())
+    assert achieved <= float(z) * 1.05 + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_drift_bound_lemma1(seed):
+    """One-slot Lyapunov drift <= B + Σ Q·(arrival − service) (Lemma 1 core).
+
+    With f one-hot and |A|<=A_max, |mu|<=mu_max, the quadratic expansion of
+    Eq.(1) gives L(t+1)-L(t) <= B + Σ_{ik} Q_i^k (f_i^k A^k − mu_i^k).
+    """
+    rng = np.random.default_rng(seed)
+    n, k = 4, 2
+    a_max, mu_max = 50.0, 40.0
+    q = jnp.asarray(rng.uniform(0, 300, (n, k)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0, a_max, k), jnp.float32)
+    mu = jnp.asarray(rng.uniform(0, mu_max, (n, k)), jnp.float32)
+    f = jnp.zeros((n, k)).at[rng.integers(0, n), jnp.arange(k)].set(1.0)
+    drift = float(lyapunov(queue_step(q, f, a, mu)) - lyapunov(q))
+    b_const = float(lyapunov_drift_bound_B(
+        jnp.full((k,), a_max), jnp.full((k,), mu_max), n
+    ))
+    rhs = b_const + float(jnp.sum(q * (f * a[None, :] - mu)))
+    assert drift <= rhs + 1e-2
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 4))
+def test_random_dispatch_is_exact_multinomial(seed, k):
+    """RANDOM: fractions sum to 1; counts integral; empty slots uniform."""
+    n = 4
+    rng = np.random.default_rng(seed)
+    key = jax.random.key(seed)
+    q = jnp.zeros((n, k))
+    a = jnp.asarray(rng.integers(0, 60, k), jnp.float32)
+    f = random_dispatch(key, q, a, None, None, None)
+    np.testing.assert_allclose(np.asarray(f).sum(axis=0), 1.0, atol=1e-5)
+    counts = np.asarray(f) * np.asarray(a)[None, :]
+    np.testing.assert_allclose(counts, np.round(counts), atol=1e-3)

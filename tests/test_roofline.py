@@ -1,0 +1,69 @@
+"""Roofline machinery tests: HLO collective parsing + term derivation."""
+
+import numpy as np
+
+from repro.launch.roofline import (
+    _shape_bytes,
+    collective_bytes_from_hlo,
+    roofline_terms,
+)
+
+_HLO = """
+HloModule test
+ENTRY %main {
+  %p0 = f32[1024,512]{1,0} parameter(0)
+  %ag = f32[1024,512]{1,0} all-gather(%p0), dimensions={0}
+  %ar.1 = bf16[2048]{0} all-reduce(%x), to_apply=%add
+  %tuple_ar = (f32[16,64]{1,0}, f32[16,64]{1,0}) all-reduce(%a, %b), to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(%y), dimensions={0}
+  %a2a = s8[128,256]{1,0} all-to-all(%z), dimensions={0}
+  %cp = f32[8,8]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %dot = f32[1024,1024]{1,0} dot(%p0, %p0), lhs_contracting_dims={1}
+  %nota = f32[9]{0} add(%q, %r)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[1024,512]") == 1024 * 512 * 4
+    assert _shape_bytes("bf16[2048]") == 2048 * 2
+    assert _shape_bytes("(f32[16,64], f32[16,64])") == 2 * 16 * 64 * 4
+    assert _shape_bytes("s8[128,256]") == 128 * 256
+    assert _shape_bytes("pred[]") == 1  # scalar: empty dims = 1 element
+
+
+def test_collective_parsing_counts_only_collectives():
+    out = collective_bytes_from_hlo(_HLO)
+    expect = {
+        "all-gather": 1024 * 512 * 4,
+        "all-reduce": 2048 * 2 + 2 * 16 * 64 * 4,
+        "reduce-scatter": 64 * 4,
+        "all-to-all": 128 * 256,
+        "collective-permute": 8 * 8 * 4,
+    }
+    assert out["by_kind"] == expect
+    assert out["total"] == sum(expect.values())
+
+
+def test_roofline_terms_dominance():
+    # compute-bound case
+    r = roofline_terms(flops=197e12, bytes_accessed=819e7, collective_bytes=0, chips=256)
+    assert r["dominant"] == "compute_s"
+    np.testing.assert_allclose(r["compute_s"], 1.0)
+    np.testing.assert_allclose(r["roofline_fraction"], 1.0)
+    # memory-bound case
+    r = roofline_terms(flops=197e10, bytes_accessed=819e9, collective_bytes=0, chips=256)
+    assert r["dominant"] == "memory_s"
+    np.testing.assert_allclose(r["memory_s"], 1.0)
+    assert r["roofline_fraction"] < 0.05
+    # collective-bound case
+    r = roofline_terms(flops=0, bytes_accessed=0, collective_bytes=50e9, chips=256)
+    assert r["dominant"] == "collective_s"
+    np.testing.assert_allclose(r["collective_s"], 1.0)
+
+
+def test_terms_are_per_device_semantics():
+    """chips must NOT divide again (cost_analysis is already per-device)."""
+    a = roofline_terms(1e12, 1e9, 1e9, chips=16)
+    b = roofline_terms(1e12, 1e9, 1e9, chips=512)
+    assert a == b

@@ -1,0 +1,95 @@
+"""Trace-driven simulator + paper-claim integration tests (reduced runs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.facebook_4dc import PaperSimConfig, make_sim_builder
+from repro.core.baselines import (
+    data_dispatch,
+    greedy_cost_dispatch,
+    random_dispatch,
+)
+from repro.core.gmsa import dispatch_fn
+from repro.core.simulator import simulate, simulate_many, summarize
+
+
+@pytest.fixture(scope="module")
+def builder():
+    cfg = PaperSimConfig()
+    template, build = make_sim_builder(cfg)
+    return cfg, template, build
+
+
+def test_trace_shapes_and_ranges(builder):
+    cfg, template, _ = builder
+    assert template.omega.shape == (cfg.t_slots, cfg.n_sites)
+    assert template.pue.shape == (cfg.t_slots, cfg.n_sites)
+    assert bool(jnp.all(template.pue >= 1.0))
+    assert bool(jnp.all(template.omega > 0))
+    assert template.r.shape == (cfg.k_types, cfg.n_sites, cfg.n_sites)
+    np.testing.assert_allclose(template.r.sum(-1), 1.0, atol=1e-5)
+    assert float(template.arrivals.mean()) == pytest.approx(cfg.lam, rel=0.15)
+
+
+def test_single_run_deterministic(builder):
+    _, template, _ = builder
+    k = jax.random.key(0)
+    o1 = simulate(template, dispatch_fn(1.0), k)
+    o2 = simulate(template, dispatch_fn(1.0), k)
+    np.testing.assert_array_equal(o1.cost, o2.cost)
+
+
+def test_paper_claims_reduced(builder):
+    """Fig 5/6 qualitative claims at 48 Monte-Carlo runs (fast CI version;
+    benchmarks/fig5.py + fig6.py run the full 1000)."""
+    _, _, build = builder
+    key = jax.random.key(1)
+    res = {}
+    for name, pol in [
+        ("gmsa1", dispatch_fn(1.0)), ("gmsa100", dispatch_fn(100.0)),
+        ("data", data_dispatch), ("random", random_dispatch),
+        ("greedy", greedy_cost_dispatch),
+    ]:
+        res[name] = summarize(simulate_many(build, pol, key, 48))
+
+    base = 0.5 * (res["data"]["time_avg_cost"] + res["random"]["time_avg_cost"])
+    # ~30% cost reduction at large V (paper Fig. 6a)
+    reduction = 1 - res["gmsa100"]["time_avg_cost"] / base
+    assert 0.2 < reduction < 0.45, reduction
+    # GMSA stable, baselines diverging (paper Fig. 5b)
+    assert res["gmsa1"]["time_avg_backlog"] < 50
+    assert res["data"]["time_avg_backlog"] > 4 * res["gmsa1"]["time_avg_backlog"]
+    assert res["random"]["time_avg_backlog"] > 4 * res["gmsa1"]["time_avg_backlog"]
+    # V trade-off: cost(V=100) < cost(V=1); backlog(V=100) > backlog(V=1)
+    assert res["gmsa100"]["time_avg_cost"] < res["gmsa1"]["time_avg_cost"]
+    assert res["gmsa100"]["time_avg_backlog"] > res["gmsa1"]["time_avg_backlog"]
+    # GREEDY is the cost floor but pays in backlog
+    assert res["greedy"]["time_avg_cost"] <= res["gmsa100"]["time_avg_cost"] + 1
+    assert res["greedy"]["time_avg_backlog"] > res["gmsa100"]["time_avg_backlog"]
+
+
+def test_elastic_drop_site(builder):
+    """Losing a DC mid-horizon: system re-stabilizes on survivors."""
+    from repro.checkpoint.fault import drop_site
+
+    cfg, template, build = builder
+    key = jax.random.key(2)
+    inputs = build(key)
+    outs = simulate(inputs, dispatch_fn(1.0), key)
+    q = outs.q_final
+    q2, r2, d2, burst = drop_site(q, inputs.r, inputs.data_dist, dead=3)
+    assert q2.shape == (3, 1) and r2.shape == (1, 3, 3)
+    np.testing.assert_allclose(np.asarray(r2).sum(-1), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(d2).sum(-1), 1.0, atol=1e-5)
+    assert float(burst[0]) == pytest.approx(float(q[3, 0]))
+    # survivors (capacity shares 0.3+0.2+0.9 = 1.4x lam without site 3's
+    # 0.6) can still absorb the arrival rate => GMSA remains stable.
+    shrunk = inputs._replace(
+        mu=inputs.mu[:, :3, :], r=r2, data_dist=d2,
+        omega=inputs.omega[:, :3], pue=inputs.pue[:, :3],
+        arrivals=inputs.arrivals.at[0, 0].add(float(burst[0])),
+    )
+    outs2 = simulate(shrunk, dispatch_fn(1.0), key)
+    assert float(outs2.backlog_avg[-1]) < 100
