@@ -18,6 +18,7 @@ def main() -> None:
         ("fig5", "benchmarks.fig5"),
         ("fig6", "benchmarks.fig6"),
         ("sim_bench", "benchmarks.sim_bench"),
+        ("placement_bench", "benchmarks.placement_bench"),
         ("kernel_bench", "benchmarks.kernel_bench"),
         ("roofline", "benchmarks.roofline"),
     ]:

@@ -1,0 +1,81 @@
+"""Two-timescale placement demo: GMSA dispatch x 4-hourly re-placement.
+
+Over the paper's 24 h / 4-DC horizon, new data keeps arriving at ForestCity
+(the most expensive power in the fleet). The slow loop re-places datasets
+every 4 hours toward cheap, capacity-rich sites — paying for every byte it
+moves over the WAN — while GMSA keeps picking managers per 5-min slot.
+
+    PYTHONPATH=src python examples/adaptive_placement.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.facebook_4dc import PaperSimConfig, make_sim_builder
+from repro.core.baselines import static_placement_rule
+from repro.core.gmsa import dispatch_fn
+from repro.placement import (
+    PlacementConfig,
+    make_adaptive_rule,
+    simulate_placed_many,
+    summarize_placed,
+)
+from repro.traces.bandwidth import bandwidth_draw
+from repro.traces.drift import dataset_growth_trace, ingest_drift_trace
+from repro.traces.price import FACEBOOK_SITES
+
+
+def main():
+    cfg = PaperSimConfig()
+    _, build = make_sim_builder(cfg)
+    up, down = bandwidth_draw(jax.random.split(jax.random.key(cfg.trace_seed), 6)[2],
+                              cfg.n_sites)
+
+    w = 48                                        # 4 h slow-loop period
+    n_epochs = cfg.t_slots // w
+    ingest = ingest_drift_trace(
+        jax.random.key(7), n_epochs, cfg.k_types, cfg.n_sites,
+        bias=jnp.array([0.05, 0.8, 0.05, 0.10]),  # ForestCity-heavy ingest
+        bias_strength=0.5,
+    )
+    sizes = dataset_growth_trace(n_epochs, cfg.k_types, 100.0, 0.05)
+    pcfg = PlacementConfig(
+        epoch_slots=w, growth=0.25, capacity_gb=(220.0,) * 4,
+        manager_share=cfg.manager_share, map_share=cfg.map_share,
+    )
+    key = jax.random.key(0)
+    pol = dispatch_fn(cfg.v)
+
+    print(f"{cfg.t_slots} slots, W = {w} (epochs: {n_epochs}), "
+          f"ingest drifting toward ForestCity, 200 Monte-Carlo runs\n")
+    print(f"{'arm':<10} {'total $/slot':>13} {'wan $/slot':>11} {'GB moved':>9} "
+          f"{'backlog':>8}")
+    outs_by_arm = {}
+    for name, rule in [
+        ("static", static_placement_rule),
+        ("adaptive", make_adaptive_rule(up, temp=2.0)),
+    ]:
+        outs = simulate_placed_many(
+            build, up, down, pol, rule, key, 200, pcfg,
+            ingest=ingest, sizes_gb=sizes,
+        )
+        outs_by_arm[name] = outs
+        s = summarize_placed(outs)
+        print(f"{name:<10} {s['time_avg_total_cost']:>13.1f} "
+              f"{s['time_avg_wan_cost']:>11.2f} {s['total_wan_gb']:>9.0f} "
+              f"{s['time_avg_backlog']:>8.2f}")
+
+    names = [s.name for s in FACEBOOK_SITES[: cfg.n_sites]]
+    print("\ndataset layout per epoch (type 0, run 0, adaptive arm):")
+    print("epoch  " + "  ".join(f"{n:>10}" for n in names))
+    placements = outs_by_arm["adaptive"].placements[0]     # (E, K, N)
+    for e in range(n_epochs):
+        row = "  ".join(f"{float(x):>10.2f}" for x in placements[e, 0])
+        print(f"{e:>5}  {row}")
+    print("\nThe slow loop drains ForestCity as ingest piles up there, and the")
+    print("fast loop (GMSA) keeps queues bounded throughout — two timescales,")
+    print("one jit-compiled scan-of-scans.")
+
+
+if __name__ == "__main__":
+    main()

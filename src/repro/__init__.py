@@ -10,6 +10,7 @@ tolerance, and Pallas TPU kernels for the dispatch and SSD hot spots.
 
 Layout:
     repro.core         — the paper's contribution (queues, energy, GMSA, Iridium)
+    repro.placement    — two-timescale data placement & replica selection
     repro.traces       — arrival/price/PUE/bandwidth/token pipelines
     repro.models       — architecture zoo
     repro.distributed  — sharding rules, collectives, compression

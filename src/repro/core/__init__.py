@@ -41,8 +41,13 @@ from repro.core.baselines import (
     random_dispatch,
     jsq_dispatch,
     greedy_cost_dispatch,
+    static_placement_rule,
 )
-from repro.core.iridium import iridium_reduce_placement, build_task_allocation
+from repro.core.iridium import (
+    iridium_reduce_placement,
+    build_task_allocation,
+    make_allocation_rebuilder,
+)
 from repro.core.simulator import SimInputs, SimOutputs, simulate, simulate_many
 
 __all__ = [
@@ -60,8 +65,10 @@ __all__ = [
     "random_dispatch",
     "jsq_dispatch",
     "greedy_cost_dispatch",
+    "static_placement_rule",
     "iridium_reduce_placement",
     "build_task_allocation",
+    "make_allocation_rebuilder",
     "SimInputs",
     "SimOutputs",
     "simulate",

@@ -92,3 +92,17 @@ def greedy_cost_dispatch(key, q: Array, arrivals: Array, mu: Array, e: Array, au
 
 
 greedy_cost_dispatch.state_independent = True
+
+
+def static_placement_rule(d: Array, obs) -> Array:
+    """STATIC-PLACEMENT baseline for the two-timescale controller.
+
+    Never re-places: the dataset layout stays wherever the trace (initial
+    Dirichlet draw + any exogenous ingest drift) puts it, exactly the frozen
+    ``data_dist`` assumption of the base paper. Plugs into
+    :func:`repro.placement.controller.simulate_placed` as the ``rule``
+    operand; the adaptive counterpart is
+    :func:`repro.placement.replica.make_adaptive_rule`.
+    """
+    del obs
+    return d

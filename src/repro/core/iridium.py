@@ -122,3 +122,31 @@ def build_task_allocation(
     eye = jnp.eye(n, dtype=jnp.float32)
     r = manager_share * eye[None, :, :] + (1.0 - manager_share) * base[:, None, :]
     return r
+
+
+def make_allocation_rebuilder(
+    up: Array,
+    down: Array,
+    size: float | Array = 1.0,
+    manager_share: float = 0.3,
+    map_share: float = 0.6,
+):
+    """Bind the static placement parameters into a ``data_dist -> r`` closure.
+
+    The returned function is pure jnp (bisection with a fixed iteration
+    count), so the slow-timescale placement controller
+    (:mod:`repro.placement.controller`) can call it *inside* a jitted
+    ``lax.scan`` to re-derive the (K, N, N) ratio tensor every epoch as the
+    dataset distribution evolves — the same math `build_task_allocation`
+    runs once at trace-build time today.
+    """
+    up = jnp.asarray(up, jnp.float32)
+    down = jnp.asarray(down, jnp.float32)
+
+    def rebuild(data_dist: Array) -> Array:
+        return build_task_allocation(
+            data_dist, up, down,
+            size=size, manager_share=manager_share, map_share=map_share,
+        )
+
+    return rebuild

@@ -40,15 +40,21 @@ class SimInputs(NamedTuple):
     """Trace bundle for one simulation run.
 
     Shapes: T slots, N DCs, K job types.
+
+    ``r`` and ``data_dist`` may carry a leading time axis — (T, K, N, N) and
+    (T, K, N) respectively — when the placement layer
+    (:mod:`repro.placement`) evolves the dataset layout over the horizon;
+    the static (K, N, N) / (K, N) forms remain the common case and are
+    broadcast over all slots.
     """
 
     arrivals: Array   # (T, K)   jobs arriving per slot
     mu: Array         # (T, N, K) service rates per slot
     omega: Array      # (T, N)   energy-price weights
     pue: Array        # (T, N)   PUE traces
-    r: Array          # (K, N, N) task-allocation ratios
+    r: Array          # (K, N, N) or (T, K, N, N) task-allocation ratios
     p_it: Array       # (K,)     per-job IT energy
-    data_dist: Array  # (K, N)   dataset distribution (aux for DATA baseline)
+    data_dist: Array  # (K, N) or (T, K, N) dataset distribution (policy aux)
 
 
 class SimOutputs(NamedTuple):
@@ -66,9 +72,13 @@ PolicyFn = Callable[..., Array]
 def _energy_tables(inputs: SimInputs) -> tuple[Array, Array]:
     """(T,K,N) cost and raw-energy tables for every slot in one einsum."""
     wpue = inputs.omega * inputs.pue                               # (T, N)
-    e_cost = jnp.einsum("kij,tj->tki", inputs.r, wpue) * inputs.p_it[None, :, None]
-    e_raw = jnp.einsum("kij,tj->tki", inputs.r, inputs.pue) * inputs.p_it[None, :, None]
-    return e_cost, e_raw
+    if inputs.r.ndim == 4:                                         # (T, K, N, N)
+        e_cost = jnp.einsum("tkij,tj->tki", inputs.r, wpue)
+        e_raw = jnp.einsum("tkij,tj->tki", inputs.r, inputs.pue)
+    else:                                                          # (K, N, N)
+        e_cost = jnp.einsum("kij,tj->tki", inputs.r, wpue)
+        e_raw = jnp.einsum("kij,tj->tki", inputs.r, inputs.pue)
+    return e_cost * inputs.p_it[None, :, None], e_raw * inputs.p_it[None, :, None]
 
 
 @functools.partial(jax.jit, static_argnames=("policy",))
@@ -82,19 +92,30 @@ def simulate(
     e_cost_all, e_raw_all = _energy_tables(inputs)                 # (T, K, N)
     scalar = jnp.asarray(scalar, jnp.float32)
 
+    dd_varying = inputs.data_dist.ndim == 3                        # (T, K, N)
+
     f_all = None
     if getattr(policy, "state_independent", False):
         keys = jax.random.split(key, t_slots)
-        f_all = jax.vmap(
-            lambda kk, a, m, e: policy(kk, q0, a, m, e, inputs.data_dist, scalar)
-        )(keys, inputs.arrivals, inputs.mu, e_cost_all)            # (T, N, K)
+        if dd_varying:
+            f_all = jax.vmap(
+                lambda kk, a, m, e, d: policy(kk, q0, a, m, e, d, scalar)
+            )(keys, inputs.arrivals, inputs.mu, e_cost_all, inputs.data_dist)
+        else:
+            f_all = jax.vmap(
+                lambda kk, a, m, e: policy(kk, q0, a, m, e, inputs.data_dist, scalar)
+            )(keys, inputs.arrivals, inputs.mu, e_cost_all)        # (T, N, K)
 
     def slot(carry, xs):
         q, key = carry
+        if dd_varying:
+            xs, aux = xs[:-1], xs[-1]
+        else:
+            aux = inputs.data_dist
         if f_all is None:
             arrivals, mu, e_cost, e_raw = xs
             key, sub = jax.random.split(key)
-            f = policy(sub, q, arrivals, mu, e_cost, inputs.data_dist, scalar)
+            f = policy(sub, q, arrivals, mu, e_cost, aux, scalar)
         else:
             arrivals, mu, e_cost, e_raw, f = xs
         fa = f * arrivals[None, :]
@@ -107,6 +128,8 @@ def simulate(
     xs = (inputs.arrivals, inputs.mu, e_cost_all, e_raw_all)
     if f_all is not None:
         xs = xs + (f_all,)
+    if dd_varying:
+        xs = xs + (inputs.data_dist,)
     (q_final, _), (cost, energy, btot, bavg, f_trace) = jax.lax.scan(
         slot, (q0, key), xs
     )

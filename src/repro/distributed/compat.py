@@ -1,0 +1,67 @@
+"""Version-compat shims for the shard_map / mesh-context API surface.
+
+The repo targets the ``jax.shard_map`` spelling (jax >= 0.5, where shard_map
+is a public top-level API with ``axis_names`` / ``check_vma``); the pinned CI
+image ships jax 0.4.x where the same machinery lives in
+``jax.experimental.shard_map`` with a ``check_rep`` knob and a mandatory
+concrete mesh. These wrappers present the new surface on both.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "get_abstract_mesh"]
+
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh=None, in_specs, out_specs, axis_names=None,
+                  check_vma=None):
+        kwargs = {}
+        if mesh is not None:
+            kwargs["mesh"] = mesh
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, *, mesh=None, in_specs, out_specs, axis_names=None,
+                  check_vma=None):
+        del axis_names  # implied by the specs on the old API
+        if mesh is None:
+            raise ValueError(
+                "jax<0.5 shard_map requires an explicit concrete mesh"
+            )
+        kwargs = {}
+        if check_vma is not None:
+            kwargs["check_rep"] = check_vma
+        return _shard_map_old(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+
+
+class _EmptyMesh:
+    """Stand-in for "no ambient mesh" with the AbstractMesh query surface."""
+
+    empty = True
+    axis_names = ()
+    shape = {}
+
+
+_EMPTY_MESH = _EmptyMesh()
+
+
+def get_abstract_mesh():
+    """The ambient (abstract) mesh, or an empty mesh when none is set."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as _mesh_lib
+
+    mesh = _mesh_lib.get_abstract_mesh()
+    # jax 0.4.x initializes the thread-local to a raw tuple, not a mesh.
+    return mesh if hasattr(mesh, "empty") else _EMPTY_MESH

@@ -131,7 +131,9 @@ def moe_ffn(
     """
     cap = expert_capacity(x.shape[1], cfg, capacity_factor)
 
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.distributed.compat import get_abstract_mesh
+
+    mesh = get_abstract_mesh()
     f = cfg.moe_d_ff or cfg.d_ff
     batch_axes = tuple(
         a for a in ("pod", "data")
@@ -153,7 +155,9 @@ def moe_ffn(
         y, aux = _moe_local(xl, wr, wg, wu, wd, cfg, cap, psum_axis="model")
         return y, jax.lax.pmean(aux, batch_axes)
 
-    return jax.shard_map(
+    from repro.distributed.compat import shard_map as _shard_map
+
+    return _shard_map(
         local_fn,
         in_specs=(
             P(bspec),                      # x: rows local per batch shard

@@ -1,0 +1,66 @@
+"""repro.placement — two-timescale data placement & replica selection.
+
+The paper's GMSA decides *per slot* which DC manages each job against a
+frozen dataset layout; this subsystem adds the slow timescale the paper
+names as future work (Sec. VI): every W slots a placement controller may
+re-place / replicate the datasets across sites — under a WAN transfer-cost
+model and per-site storage caps — while GMSA keeps dispatching against the
+current layout.
+
+* :mod:`repro.placement.wan`        — WAN topology, transfer energy/latency.
+* :mod:`repro.placement.replica`    — placement & replica-selection scoring
+  (vectorized greedy / LP-vertex rules in the style of ``gmsa_dispatch``).
+* :mod:`repro.placement.controller` — the two-timescale scan-of-scans engine
+  (``simulate_placed`` / ``simulate_placed_many``), jit-compiled end-to-end
+  and vmappable over Monte-Carlo keys.
+
+The STATIC-PLACEMENT comparison baseline lives with the other baselines in
+:func:`repro.core.baselines.static_placement_rule`; drifting-dataset traces
+come from :mod:`repro.traces.drift`.
+"""
+
+from repro.placement.controller import (
+    PlacedOutputs,
+    PlacementConfig,
+    SlowObs,
+    simulate_placed,
+    simulate_placed_many,
+    summarize_placed,
+)
+from repro.placement.replica import (
+    capacity_project,
+    effective_replicas,
+    hosting_scores,
+    make_adaptive_rule,
+    replica_read_assignment,
+    sync_cost,
+    target_placement,
+)
+from repro.placement.wan import (
+    WanModel,
+    transfer_cost,
+    transfer_latency,
+    transfer_plan,
+    wan_topology,
+)
+
+__all__ = [
+    "PlacedOutputs",
+    "PlacementConfig",
+    "SlowObs",
+    "simulate_placed",
+    "simulate_placed_many",
+    "summarize_placed",
+    "capacity_project",
+    "effective_replicas",
+    "hosting_scores",
+    "make_adaptive_rule",
+    "replica_read_assignment",
+    "sync_cost",
+    "target_placement",
+    "WanModel",
+    "transfer_cost",
+    "transfer_latency",
+    "transfer_plan",
+    "wan_topology",
+]

@@ -1,0 +1,316 @@
+"""Two-timescale placement controller: slow re-placement x fast GMSA dispatch.
+
+The fast loop is the paper's per-slot GMSA (or any simulator policy); the
+slow loop fires every ``epoch_slots`` (W) slots and may re-place / replicate
+the datasets across sites under a WAN transfer-cost model and per-site
+storage caps, after which the Iridium ratio tensor ``r`` is re-derived for
+the new layout. Structurally this is a ``lax.scan`` over epochs whose body
+contains the placement step, the (K, N, N) Iridium rebuild, and an inner
+``lax.scan`` over the epoch's W slots — one jit compilation end-to-end,
+vmappable over Monte-Carlo keys exactly like ``repro.core.simulator``.
+
+Epoch 0 always runs the *given* placement untouched (no move, no rebuild),
+so with ``W >= T`` the controller degenerates to a single epoch and
+``simulate_placed`` reproduces plain ``simulate`` bit-for-bit — the
+equivalence the test suite pins down.
+
+Exogenous dataset drift (new data ingested at sites the controller does not
+choose — the scenario of Zhang et al., where placement must adapt over
+time) enters through an optional per-epoch ``ingest`` trace; the controller
+observes the drifted layout and corrects it within its per-epoch move
+budget, paying for every byte through :mod:`repro.placement.wan`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.iridium import make_allocation_rebuilder
+from repro.core.queues import queue_step
+from repro.core.simulator import PolicyFn, SimInputs
+from repro.placement.wan import (
+    DEFAULT_ENERGY_PER_GB,
+    transfer_cost,
+    transfer_latency,
+    transfer_plan,
+    wan_topology,
+)
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementConfig:
+    """Static knobs of the two-timescale controller (hashable: jit-static).
+
+    Attributes:
+        epoch_slots: W — slow-loop period in slots. The horizon T must be a
+            multiple of min(W, T).
+        move_budget: alpha in [0, 1] — per epoch, the placement moves at
+            most this fraction of the way from the current layout to the
+            rule's target (bounds the WAN burst per epoch).
+        dataset_gb: per-type dataset sizes in GB (scalar broadcasts).
+        capacity_gb: per-site storage caps in GB, or ``None`` = uncapped.
+        energy_per_gb: WAN energy per GB (job-energy equivalents).
+        growth: fraction of each dataset that is fresh ingest per epoch
+            (only effective when an ``ingest`` trace is supplied).
+        size / manager_share / map_share: Iridium rebuild parameters.
+            Defaults equal ``build_task_allocation``'s, so default-built
+            ``SimInputs.r`` and the per-epoch rebuilds agree; when the
+            inputs use non-default shares (e.g. ``facebook_4dc``'s
+            manager_share=0.62), pass the same values here or the cost
+            series jumps at the first rebuild for non-placement reasons.
+    """
+
+    epoch_slots: int = 48
+    move_budget: float = 0.5
+    dataset_gb: float | tuple = 100.0
+    capacity_gb: tuple | None = None
+    energy_per_gb: float = DEFAULT_ENERGY_PER_GB
+    growth: float = 0.0
+    size: float = 1.0
+    manager_share: float = 0.3
+    map_share: float = 0.6
+
+
+class SlowObs(NamedTuple):
+    """What the slow-timescale rule sees at an epoch boundary.
+
+    Prices/PUE are the *upcoming* epoch's averages — day-ahead market
+    structure and weather forecasts make these available in practice (the
+    same assumption Iridium makes for bandwidth).
+    """
+
+    wpue_bar: Array     # (N,)   epoch-average omega * PUE
+    mu_bar: Array       # (N, K) epoch-average service rates
+    q: Array            # (N, K) backlogs at the boundary
+    sizes_gb: Array     # (K,)   dataset sizes this epoch
+    capacity_gb: Array  # (N,)   storage caps
+
+
+#: rule(d_current, obs) -> d_target, both (K, N) row-stochastic.
+PlacementRule = Callable[[Array, SlowObs], Array]
+
+
+class PlacedOutputs(NamedTuple):
+    """Flattened fast-loop outputs plus the slow-loop audit trail."""
+
+    cost: Array            # (T,) per-slot dispatch energy cost
+    energy: Array          # (T,)
+    backlog_total: Array   # (T,)
+    backlog_avg: Array     # (T,)
+    q_final: Array         # (N, K)
+    f_trace: Array         # (T, N, K)
+    placements: Array      # (E, K, N) layout in force during each epoch
+    r_trace: Array         # (E, K, N, N) ratio tensor per epoch
+    wan_cost: Array        # (E,) $ spent moving data at each boundary
+    wan_energy: Array      # (E,) WAN energy (job-equivalents)
+    wan_gb: Array          # (E,) GB crossing the WAN
+    wan_latency_s: Array   # (E,) bottleneck completion time of each move
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "rule", "cfg"))
+def simulate_placed(
+    inputs: SimInputs,
+    up: Array,
+    down: Array,
+    policy: PolicyFn,
+    rule: PlacementRule,
+    key: Array,
+    cfg: PlacementConfig,
+    scalar: float | Array = 0.0,
+    ingest: Array | None = None,
+    sizes_gb: Array | None = None,
+) -> PlacedOutputs:
+    """Run the two-timescale controller over one trace.
+
+    Args:
+        inputs: the usual trace bundle; ``data_dist`` must be the static
+            (K, N) form (it becomes the epoch-0 layout) and ``r`` the
+            static (K, N, N) form (used verbatim for epoch 0).
+        up/down: (N,) site bandwidths — feed both the WAN transfer model
+            and the per-epoch Iridium rebuild.
+        policy: fast-loop dispatch policy (simulator signature).
+        rule: slow-loop placement rule, e.g.
+            :func:`repro.placement.replica.make_adaptive_rule` or
+            :func:`repro.core.baselines.static_placement_rule`.
+        key: PRNG key (split per slot exactly as ``simulate`` does).
+        cfg: static controller knobs.
+        scalar: traced control parameter forwarded to the policy (GMSA's V).
+        ingest: optional (E, K, N) exogenous ingest distributions; mixed in
+            with weight ``cfg.growth`` at every boundary after epoch 0.
+        sizes_gb: optional (E, K) per-epoch dataset sizes (growth trace);
+            defaults to ``cfg.dataset_gb`` for all epochs.
+    """
+    t_slots, k_types = inputs.arrivals.shape
+    n = inputs.mu.shape[1]
+    if inputs.data_dist.ndim != 2 or inputs.r.ndim != 3:
+        raise ValueError("simulate_placed owns the time axis: pass static "
+                         "(K, N) data_dist and (K, N, N) r")
+    w = min(cfg.epoch_slots, t_slots)
+    if t_slots % w != 0:
+        raise ValueError(f"T={t_slots} must be a multiple of W={w}")
+    n_epochs = t_slots // w
+
+    wan = wan_topology(up, down, cfg.energy_per_gb)
+    rebuild = make_allocation_rebuilder(
+        up, down, size=cfg.size,
+        manager_share=cfg.manager_share, map_share=cfg.map_share,
+    )
+    cap = (
+        jnp.full((n,), jnp.inf, jnp.float32)
+        if cfg.capacity_gb is None
+        else jnp.asarray(cfg.capacity_gb, jnp.float32)
+    )
+    if sizes_gb is None:
+        sizes_gb = jnp.broadcast_to(
+            jnp.asarray(cfg.dataset_gb, jnp.float32), (n_epochs, k_types)
+        )
+    scalar = jnp.asarray(scalar, jnp.float32)
+    p_it = inputs.p_it
+
+    ep = lambda x: x.reshape((n_epochs, w) + x.shape[1:])
+    arr_ep, mu_ep = ep(inputs.arrivals), ep(inputs.mu)
+    om_ep, pu_ep = ep(inputs.omega), ep(inputs.pue)
+    first = jnp.arange(n_epochs) == 0
+
+    # Match ``simulate``'s PRNG stream exactly on both of its policy paths:
+    # state-independent policies consume split(key, T)[t] per slot (the
+    # precomputed-vmap path), everything else splits the carried key.
+    state_ind = getattr(policy, "state_independent", False)
+    keys_ep = ep(jax.random.split(key, t_slots)) if state_ind else None
+
+    q0 = jnp.zeros((n, k_types), jnp.float32)
+    d0 = jnp.asarray(inputs.data_dist, jnp.float32)
+    r0 = inputs.r
+
+    def epoch(carry, xs):
+        q, key, d = carry
+        if state_ind:
+            arr_e, mu_e, om_e, pu_e, size_e, ing_e, is_first, keys_e = xs
+        else:
+            arr_e, mu_e, om_e, pu_e, size_e, ing_e, is_first = xs
+
+        # -- slow timescale: drift, observe, re-place, pay the WAN bill.
+        if ingest is not None:
+            g = jnp.float32(cfg.growth)
+            drifted = (1.0 - g) * d + g * ing_e
+            drifted = drifted / jnp.maximum(
+                jnp.sum(drifted, axis=1, keepdims=True), _EPS
+            )
+            d_drift = jnp.where(is_first, d, drifted)
+        else:
+            d_drift = d
+        obs = SlowObs(
+            wpue_bar=jnp.mean(om_e * pu_e, axis=0),
+            mu_bar=jnp.mean(mu_e, axis=0),
+            q=q, sizes_gb=size_e, capacity_gb=cap,
+        )
+        target = rule(d_drift, obs)
+        stepped = d_drift + cfg.move_budget * (target - d_drift)
+        stepped = stepped / jnp.maximum(jnp.sum(stepped, axis=1, keepdims=True), _EPS)
+        d_new = jnp.where(is_first, d, stepped)
+        plan = transfer_plan(d_drift, d_new, size_e)                  # (K, N, N)
+        wan_c, wan_e, wan_gb = transfer_cost(plan, wan, om_e[0], pu_e[0])
+        wan_lat = transfer_latency(plan, wan)
+        r_e = jnp.where(is_first, r0, rebuild(d_new))                 # (K, N, N)
+
+        # -- fast timescale: the simulator's slot body against (d_new, r_e).
+        wpue_e = om_e * pu_e                                          # (W, N)
+        e_cost = jnp.einsum("kij,tj->tki", r_e, wpue_e) * p_it[None, :, None]
+        e_raw = jnp.einsum("kij,tj->tki", r_e, pu_e) * p_it[None, :, None]
+
+        def slot(carry2, xs2):
+            q2, key2 = carry2
+            if state_ind:
+                arrivals, mu, ec, er, sub = xs2
+            else:
+                arrivals, mu, ec, er = xs2
+                key2, sub = jax.random.split(key2)
+            f = policy(sub, q2, arrivals, mu, ec, d_new, scalar)
+            fa = f * arrivals[None, :]
+            cost = jnp.sum(fa * ec.T)
+            energy = jnp.sum(fa * er.T)
+            q_next = queue_step(q2, f, arrivals, mu)
+            out = (cost, energy, jnp.sum(q_next), jnp.mean(q_next), f)
+            return (q_next, key2), out
+
+        slot_xs = (arr_e, mu_e, e_cost, e_raw)
+        if state_ind:
+            slot_xs = slot_xs + (keys_e,)
+        (q, key), slot_outs = jax.lax.scan(slot, (q, key), slot_xs)
+        epoch_out = slot_outs + (d_new, r_e, wan_c, wan_e, wan_gb, wan_lat)
+        return (q, key, d_new), epoch_out
+
+    xs = (arr_ep, mu_ep, om_ep, pu_ep, sizes_gb,
+          ingest if ingest is not None else jnp.zeros((n_epochs, k_types, n)),
+          first)
+    if state_ind:
+        xs = xs + (keys_ep,)
+    (q_final, _, _), outs = jax.lax.scan(epoch, (q0, key, d0), xs)
+    cost, energy, btot, bavg, f_trace, d_tr, r_tr, wc, we, wgb, wlat = outs
+    flat = lambda x: x.reshape((t_slots,) + x.shape[2:])
+    return PlacedOutputs(
+        cost=flat(cost), energy=flat(energy),
+        backlog_total=flat(btot), backlog_avg=flat(bavg),
+        q_final=q_final, f_trace=flat(f_trace),
+        placements=d_tr, r_trace=r_tr,
+        wan_cost=wc, wan_energy=we, wan_gb=wgb, wan_latency_s=wlat,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("build_inputs", "policy", "rule", "cfg", "n_runs")
+)
+def simulate_placed_many(
+    build_inputs: Callable[[Array], SimInputs],
+    up: Array,
+    down: Array,
+    policy: PolicyFn,
+    rule: PlacementRule,
+    key: Array,
+    n_runs: int,
+    cfg: PlacementConfig,
+    scalar: float | Array = 0.0,
+    ingest: Array | None = None,
+    sizes_gb: Array | None = None,
+) -> PlacedOutputs:
+    """Monte-Carlo replication of :func:`simulate_placed` (vmap over keys).
+
+    Mirrors ``simulate_many``: fresh stochastic traces + policy randomness
+    per run, deterministic traces (prices, PUE, drift) shared. One
+    compilation serves every run.
+    """
+    keys = jax.random.split(key, n_runs)
+
+    def one(run_key):
+        k_build, k_sim = jax.random.split(run_key)
+        return simulate_placed(
+            build_inputs(k_build), up, down, policy, rule, k_sim, cfg,
+            scalar=scalar, ingest=ingest, sizes_gb=sizes_gb,
+        )
+
+    return jax.vmap(one)(keys)
+
+
+def summarize_placed(outs: PlacedOutputs) -> dict:
+    """Time-averaged scalars incl. the WAN bill (averaged over a runs axis)."""
+    t_slots = outs.cost.shape[-1]
+    dispatch = jnp.mean(outs.cost)
+    wan_per_slot = jnp.mean(jnp.sum(outs.wan_cost, axis=-1)) / t_slots
+    return {
+        "time_avg_dispatch_cost": float(dispatch),
+        "time_avg_wan_cost": float(wan_per_slot),
+        "time_avg_total_cost": float(dispatch + wan_per_slot),
+        "time_avg_energy": float(jnp.mean(outs.energy)),
+        "time_avg_backlog": float(jnp.mean(outs.backlog_avg)),
+        "total_wan_gb": float(jnp.mean(jnp.sum(outs.wan_gb, axis=-1))),
+        "max_move_latency_s": float(jnp.max(outs.wan_latency_s)),
+        "final_backlog_total": float(jnp.mean(outs.q_final.sum(axis=(-2, -1)))),
+    }

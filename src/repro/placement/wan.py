@@ -1,0 +1,118 @@
+"""WAN topology + inter-site transfer energy/latency model.
+
+Bulk data movement between sites rides the same core network as the shuffle
+traffic the Iridium layer reasons about: site i's uplink feeds the core,
+site j's downlink drains it, so the effective i->j rate is the harmonic
+combination 1/(1/U_i + 1/D_j). Moving bytes is not free energy-wise either —
+routers/transponders burn a roughly linear energy-per-byte, and that energy
+is drawn at the two endpoint DCs (at their PUE and price). The slow-timescale
+placement controller charges every re-placement decision through this model,
+so "chase the cheap site" is only worth it when the expected dispatch-cost
+savings beat the migration bill.
+
+Units follow the simulator's calibration (see :mod:`repro.traces.price`):
+``omega`` is $/MWh, per-job IT energy is 1 MWh-equivalent, so
+``energy_per_gb`` is expressed in *job-energy equivalents per GB* — the
+default 0.01 means shipping 100 GB costs the energy of one analytics job.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import Array
+
+#: WAN transfer energy per GB moved, in per-job IT-energy equivalents.
+#: Calibrated so a full 100 GB dataset migration costs ~1 job's energy.
+DEFAULT_ENERGY_PER_GB = 0.01
+
+
+class WanModel(NamedTuple):
+    """Static WAN description used by the placement controller.
+
+    Attributes:
+        up: (N,) uplink bandwidths, Gb/s.
+        down: (N,) downlink bandwidths, Gb/s.
+        link_bw: (N, N) effective site-to-site bulk rate, Gb/s
+            (``inf`` on the diagonal — local "moves" are free).
+        energy_per_gb: scalar WAN energy per GB, job-energy equivalents.
+    """
+
+    up: Array
+    down: Array
+    link_bw: Array
+    energy_per_gb: Array
+
+
+def wan_topology(
+    up: Array, down: Array, energy_per_gb: float = DEFAULT_ENERGY_PER_GB
+) -> WanModel:
+    """Build the (N, N) core-routed link model from per-site access rates."""
+    up = jnp.asarray(up, jnp.float32)
+    down = jnp.asarray(down, jnp.float32)
+    n = up.shape[0]
+    bw = 1.0 / (1.0 / up[:, None] + 1.0 / down[None, :])        # (N, N)
+    bw = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, bw)
+    return WanModel(up, down, bw, jnp.asarray(energy_per_gb, jnp.float32))
+
+
+def transfer_plan(d_old: Array, d_new: Array, sizes_gb: Array) -> Array:
+    """(K, N, N) GB moved on each link to morph ``d_old`` into ``d_new``.
+
+    Surplus sites (placement fraction shrinks) export, deficit sites import;
+    the coupling routes each exporter's bytes to the importers proportionally
+    to their deficits — the product coupling of the two marginals, which is
+    exact on total bytes and jit-safe (no sorting / matching).
+
+    Args:
+        d_old: (K, N) current placement (rows on the simplex).
+        d_new: (K, N) target placement.
+        sizes_gb: (K,) dataset sizes in GB.
+
+    Returns:
+        (K, N, N) plan with plan[k, i, j] GB moving i -> j; zero diagonal.
+    """
+    delta = d_new - d_old                                        # (K, N)
+    out_gb = jnp.maximum(-delta, 0.0) * sizes_gb[:, None]        # exports
+    in_gb = jnp.maximum(delta, 0.0) * sizes_gb[:, None]          # imports
+    total = jnp.sum(in_gb, axis=1, keepdims=True)                # (K, 1)
+    share = in_gb / jnp.maximum(total, 1e-12)                    # (K, N)
+    return out_gb[:, :, None] * share[:, None, :]                # (K, N, N)
+
+
+def transfer_cost(
+    plan_gb: Array, wan: WanModel, omega: Array, pue: Array
+) -> tuple[Array, Array, Array]:
+    """Price the WAN bytes of one re-placement event.
+
+    Energy for a byte on link i->j is drawn half at each endpoint, at that
+    endpoint's PUE, and billed at that endpoint's current price.
+
+    Args:
+        plan_gb: (K, N, N) bytes moved per link (from :func:`transfer_plan`).
+        wan: the :class:`WanModel`.
+        omega: (N,) prices at the epoch boundary.
+        pue: (N,) PUE at the epoch boundary.
+
+    Returns:
+        (cost, energy, gb_moved) scalars — $ cost, PUE-weighted energy in
+        job-equivalents, and total GB crossing the WAN.
+    """
+    wpue = omega * pue                                           # (N,)
+    link_price = 0.5 * (wpue[:, None] + wpue[None, :])           # (N, N)
+    link_energy = 0.5 * (pue[:, None] + pue[None, :])
+    gb_links = jnp.sum(plan_gb, axis=0)                          # (N, N)
+    cost = wan.energy_per_gb * jnp.sum(gb_links * link_price)
+    energy = wan.energy_per_gb * jnp.sum(gb_links * link_energy)
+    return cost, energy, jnp.sum(gb_links)
+
+
+def transfer_latency(plan_gb: Array, wan: WanModel) -> Array:
+    """Bottleneck completion time (seconds) of a re-placement event.
+
+    Links run in parallel; the event finishes when the slowest link drains:
+    ``max_ij plan[i, j] * 8 / bw[i, j]`` (GB -> Gb over Gb/s).
+    """
+    gb_links = jnp.sum(plan_gb, axis=0)                          # (N, N)
+    return jnp.max(gb_links * 8.0 / wan.link_bw)

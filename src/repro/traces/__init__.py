@@ -7,6 +7,8 @@ Control-plane traces (paper Sec. V-A experimental setup):
     * :mod:`repro.traces.pue`       — PUE traces (Facebook dashboard-like).
     * :mod:`repro.traces.bandwidth` — inter-site up/down bandwidths (100 Mb/s–2 Gb/s).
     * :mod:`repro.traces.datasets`  — per-type dataset distributions & service rates.
+    * :mod:`repro.traces.drift`     — slow-timescale dataset drift/growth (feeds
+      the repro.placement two-timescale controller).
 
 Training-data pipeline (used by repro.train):
     * :mod:`repro.traces.tokens`    — deterministic synthetic token corpus,
@@ -18,6 +20,7 @@ from repro.traces.price import price_trace, SiteSpec, FACEBOOK_SITES
 from repro.traces.pue import pue_trace
 from repro.traces.bandwidth import bandwidth_draw
 from repro.traces.datasets import dataset_distribution, service_rate_trace
+from repro.traces.drift import dataset_growth_trace, ingest_drift_trace
 
 __all__ = [
     "poisson_arrivals",
@@ -29,4 +32,6 @@ __all__ = [
     "bandwidth_draw",
     "dataset_distribution",
     "service_rate_trace",
+    "dataset_growth_trace",
+    "ingest_drift_trace",
 ]

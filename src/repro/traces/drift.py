@@ -1,0 +1,81 @@
+"""Slow-timescale dataset drift & growth traces.
+
+The base paper freezes the dataset distribution for the whole horizon; real
+geo-distributed datasets drift — new data is ingested where users generate
+it, and total volume grows — which is exactly why placement must be
+re-decided over time (Zhang et al., reliable geo-distributed executions).
+These generators produce the slow-timescale inputs of
+:func:`repro.placement.controller.simulate_placed`:
+
+* :func:`ingest_drift_trace` — per-epoch (E, K, N) ingest distributions: a
+  Dirichlet random walk on the simplex, optionally biased toward a target
+  mix (e.g. "user growth concentrates at the expensive sites" — the
+  adversarial scenario for static placement);
+* :func:`dataset_growth_trace` — per-epoch (E, K) dataset sizes under
+  compound growth.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+_EPS = 1e-6
+
+
+def ingest_drift_trace(
+    key: Array,
+    n_epochs: int,
+    k_types: int,
+    n_sites: int,
+    conc: float = 40.0,
+    bias: Array | None = None,
+    bias_strength: float = 0.0,
+) -> Array:
+    """(E, K, N) ingest distributions: Dirichlet random walk per job type.
+
+    Each epoch's ingest mix is drawn Dirichlet around the previous one
+    (concentration ``conc`` — larger = slower drift), then pulled toward
+    ``bias`` with weight ``bias_strength``. Rows sum to 1.
+
+    Args:
+        key: PRNG key.
+        n_epochs / k_types / n_sites: trace shape.
+        conc: Dirichlet concentration of the walk (wander speed).
+        bias: optional (N,) attractor distribution.
+        bias_strength: per-epoch pull toward the attractor in [0, 1].
+    """
+    if bias is None:
+        bias = jnp.full((n_sites,), 1.0 / n_sites, jnp.float32)
+    bias = jnp.asarray(bias, jnp.float32)
+
+    k_init, k_walk = jax.random.split(key)
+    c0 = jax.random.dirichlet(
+        k_init, jnp.full((n_sites,), 6.0, jnp.float32), (k_types,)
+    )                                                               # (K, N)
+    step_keys = jax.random.split(k_walk, n_epochs)
+
+    def step(c, kk):
+        keys = jax.random.split(kk, k_types)
+        walked = jax.vmap(
+            lambda k1, ck: jax.random.dirichlet(k1, conc * ck + _EPS)
+        )(keys, c)                                                  # (K, N)
+        pulled = (1.0 - bias_strength) * walked + bias_strength * bias[None, :]
+        pulled = pulled / jnp.sum(pulled, axis=1, keepdims=True)
+        return pulled, pulled
+
+    _, trace = jax.lax.scan(step, c0, step_keys)
+    return trace                                                    # (E, K, N)
+
+
+def dataset_growth_trace(
+    n_epochs: int,
+    k_types: int,
+    base_gb: float | Array = 100.0,
+    growth_per_epoch: float = 0.0,
+) -> Array:
+    """(E, K) dataset sizes: ``base_gb * (1 + g)^e`` compound growth."""
+    base = jnp.broadcast_to(jnp.asarray(base_gb, jnp.float32), (k_types,))
+    factor = (1.0 + growth_per_epoch) ** jnp.arange(n_epochs, dtype=jnp.float32)
+    return factor[:, None] * base[None, :]

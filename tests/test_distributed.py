@@ -63,6 +63,9 @@ _SUBPROCESS_PROG = textwrap.dedent("""
     from repro.serve.step import make_decode_step
 
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    # jax >= 0.5 spells the mesh context jax.set_mesh; on older versions the
+    # Mesh object itself is the context manager.
+    mesh_ctx = (lambda m: jax.set_mesh(m)) if hasattr(jax, "set_mesh") else (lambda m: m)
     cfg = C.get_arch("qwen2-0.5b", "smoke")
     shape = ShapeConfig("t", "train", 64, 8)
     out = {}
@@ -71,7 +74,7 @@ _SUBPROCESS_PROG = textwrap.dedent("""
         tcfg = TrainStepConfig(microbatches=2, remat="dots", grad_sync=sync)
         step, pspecs, opt_specs, shardings_for, init_efb = make_train_step(cfg, mesh, tcfg)
         batch = make_batch(cfg, shape, jax.random.key(0), embed_dtype=jnp.float32)
-        with jax.set_mesh(mesh):
+        with mesh_ctx(mesh):
             in_sh, out_sh = shardings_for(batch, shape.global_batch)
             params = jax.device_put(init_params(jax.random.key(1), cfg, jnp.float32), in_sh[0])
             opt = jax.device_put(adamw_init(params), in_sh[1])
@@ -89,7 +92,7 @@ _SUBPROCESS_PROG = textwrap.dedent("""
     # sharded decode
     dshape = ShapeConfig("d", "decode", 128, 8)
     fn, pspecs, shardings_for = make_decode_step(cfg, mesh)
-    with jax.set_mesh(mesh):
+    with mesh_ctx(mesh):
         cache = init_cache(cfg, 8, 128, jnp.float32, prefilled=128)
         in_sh, out_sh = shardings_for(cache, 8)
         params = jax.device_put(init_params(jax.random.key(1), cfg, jnp.float32), in_sh[0])

@@ -1,0 +1,102 @@
+"""Iridium bisection edge cases: degenerate data layouts and bandwidths.
+
+The property suite (test_properties.py) fuzzes the interior of the domain;
+these pin down the boundary: d_j in {0, 1}, single-site jobs, and equal
+bandwidths, where the feasible-box arithmetic divides by (1 - d) or d.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.iridium import (
+    build_task_allocation,
+    iridium_reduce_placement,
+    make_allocation_rebuilder,
+)
+
+
+def _assert_simplex(r, atol=1e-4):
+    r = np.asarray(r)
+    assert (r >= -1e-6).all(), r
+    np.testing.assert_allclose(r.sum(-1), 1.0, atol=atol)
+
+
+def test_all_data_at_one_site():
+    """d is one-hot: uplink of the hot site is the only exporter."""
+    d = jnp.array([0.0, 1.0, 0.0, 0.0])
+    up = jnp.array([1.0, 0.5, 2.0, 1.5])
+    down = jnp.array([1.0, 1.0, 1.0, 1.0])
+    r, z = iridium_reduce_placement(d, up, down, size=1.0)
+    _assert_simplex(r)
+    assert float(z) >= 0.0
+    # The bottleneck is no worse than the trivial everything-at-site-1 plan
+    # (z = 0 there) relaxed by shipping work out, and no worse than the
+    # everything-remote plan.
+    assert float(z) <= 1.0 / 0.5 + 1e-3
+
+
+def test_no_data_anywhere_but_one_with_zero_bandwidth_headroom():
+    """d_j = 0 sites have lo_j = 0 (no export pressure): placement valid."""
+    d = jnp.array([1.0, 0.0])
+    up = jnp.array([0.1, 2.0])
+    down = jnp.array([2.0, 0.1])
+    r, z = iridium_reduce_placement(d, up, down, size=1.0)
+    _assert_simplex(r)
+
+
+def test_single_site_job():
+    """N = 1: the only feasible placement is r = [1], z = 0-ish."""
+    d = jnp.array([1.0])
+    up = jnp.array([0.7])
+    down = jnp.array([1.3])
+    r, z = iridium_reduce_placement(d, up, down, size=1.0)
+    _assert_simplex(r)
+    np.testing.assert_allclose(np.asarray(r), [1.0], atol=1e-5)
+
+
+def test_degenerate_equal_bandwidths():
+    """All links identical: uniform data should give (near-)uniform reduce."""
+    n = 4
+    d = jnp.full((n,), 1.0 / n)
+    up = jnp.full((n,), 1.0)
+    down = jnp.full((n,), 1.0)
+    r, z = iridium_reduce_placement(d, up, down, size=1.0)
+    _assert_simplex(r)
+    np.testing.assert_allclose(np.asarray(r), np.full(n, 1.0 / n), atol=5e-3)
+
+
+def test_equal_bandwidths_skewed_data_stays_on_simplex():
+    d = jnp.array([0.7, 0.1, 0.1, 0.1])
+    up = jnp.full((4,), 1.0)
+    down = jnp.full((4,), 1.0)
+    r, _ = iridium_reduce_placement(d, up, down, size=2.0)
+    _assert_simplex(r)
+
+
+def test_build_task_allocation_one_hot_rows():
+    """The full (K, N, N) tensor stays row-stochastic on boundary data."""
+    data_dist = jnp.array([
+        [1.0, 0.0, 0.0],
+        [0.0, 0.0, 1.0],
+        [0.5, 0.5, 0.0],
+    ])
+    up = jnp.array([0.3, 1.0, 2.0])
+    down = jnp.array([2.0, 0.3, 1.0])
+    r = build_task_allocation(data_dist, up, down)
+    _assert_simplex(r)
+    assert r.shape == (3, 3, 3)
+
+
+def test_rebuilder_matches_build_task_allocation():
+    data_dist = jnp.array([[0.2, 0.5, 0.3]])
+    up = jnp.array([1.0, 0.4, 2.0])
+    down = jnp.array([0.8, 1.6, 0.6])
+    rebuild = make_allocation_rebuilder(
+        up, down, size=1.0, manager_share=0.62, map_share=0.6
+    )
+    r1 = rebuild(data_dist)
+    r2 = build_task_allocation(
+        data_dist, up, down, size=1.0, manager_share=0.62, map_share=0.6
+    )
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
