@@ -53,6 +53,11 @@ def fmt_row(r: dict) -> dict:
 def main(variant: str = "baseline"):
     rows = [fmt_row(r) for r in load(variant)]
     ok = [r for r in rows if r["status"] == "ok"]
+    if not ok:
+        raise FileNotFoundError(
+            f"no usable dry-run records under {DRY}/*__{variant}.json — "
+            "run the dry-run sweep first; refusing to write empty tables"
+        )
 
     csv_path = ART / f"roofline_{variant}.csv"
     md_path = ART / f"roofline_{variant}.md"

@@ -48,8 +48,8 @@ def main():
 
     print(f"{cfg.t_slots} slots, W = {w} (epochs: {n_epochs}), "
           f"ingest drifting toward ForestCity, 200 Monte-Carlo runs\n")
-    print(f"{'arm':<10} {'total $/slot':>13} {'wan $/slot':>11} {'GB moved':>9} "
-          f"{'backlog':>8}")
+    print(f"{'arm':<10} {'total $/slot':>13} {'wan $/slot':>11} "
+          f"{'sync $/slot':>12} {'GB moved':>9} {'backlog':>8}")
     outs_by_arm = {}
     for name, rule in [
         ("static", static_placement_rule),
@@ -62,8 +62,8 @@ def main():
         outs_by_arm[name] = outs
         s = summarize_placed(outs)
         print(f"{name:<10} {s['time_avg_total_cost']:>13.1f} "
-              f"{s['time_avg_wan_cost']:>11.2f} {s['total_wan_gb']:>9.0f} "
-              f"{s['time_avg_backlog']:>8.2f}")
+              f"{s['time_avg_wan_cost']:>11.2f} {s['time_avg_sync_cost']:>12.2f} "
+              f"{s['total_wan_gb']:>9.0f} {s['time_avg_backlog']:>8.2f}")
 
     names = [s.name for s in FACEBOOK_SITES[: cfg.n_sites]]
     print("\ndataset layout per epoch (type 0, run 0, adaptive arm):")

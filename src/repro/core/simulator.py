@@ -69,16 +69,49 @@ class SimOutputs(NamedTuple):
 PolicyFn = Callable[..., Array]
 
 
+def energy_tables(
+    r: Array, wpue: Array, pue: Array, p_it: Array
+) -> tuple[Array, Array]:
+    """(T,K,N) dispatch cost and raw-energy tables in one einsum each.
+
+    The single definition of the per-slot energy accounting, shared by
+    ``simulate`` and the placement controller's per-epoch tables (the other
+    half of the structural equivalence alongside :func:`slot_step`).
+    ``r`` is (K, N, N) broadcast over slots, or (T, K, N, N) time-varying;
+    ``wpue`` / ``pue`` are (T, N).
+    """
+    if r.ndim == 4:
+        e_cost = jnp.einsum("tkij,tj->tki", r, wpue)
+        e_raw = jnp.einsum("tkij,tj->tki", r, pue)
+    else:
+        e_cost = jnp.einsum("kij,tj->tki", r, wpue)
+        e_raw = jnp.einsum("kij,tj->tki", r, pue)
+    return e_cost * p_it[None, :, None], e_raw * p_it[None, :, None]
+
+
 def _energy_tables(inputs: SimInputs) -> tuple[Array, Array]:
-    """(T,K,N) cost and raw-energy tables for every slot in one einsum."""
-    wpue = inputs.omega * inputs.pue                               # (T, N)
-    if inputs.r.ndim == 4:                                         # (T, K, N, N)
-        e_cost = jnp.einsum("tkij,tj->tki", inputs.r, wpue)
-        e_raw = jnp.einsum("tkij,tj->tki", inputs.r, inputs.pue)
-    else:                                                          # (K, N, N)
-        e_cost = jnp.einsum("kij,tj->tki", inputs.r, wpue)
-        e_raw = jnp.einsum("kij,tj->tki", inputs.r, inputs.pue)
-    return e_cost * inputs.p_it[None, :, None], e_raw * inputs.p_it[None, :, None]
+    """(T,K,N) cost and raw-energy tables for every slot of a trace bundle."""
+    return energy_tables(
+        inputs.r, inputs.omega * inputs.pue, inputs.pue, inputs.p_it
+    )
+
+
+def slot_step(
+    q: Array, f: Array, arrivals: Array, mu: Array, e_cost: Array, e_raw: Array
+) -> tuple[Array, tuple]:
+    """Advance one slot under dispatch ``f``: accrue cost/energy, step queues.
+
+    The single definition of the per-slot semantics, shared by ``simulate``
+    and the placement controller's fast loop (so their W >= T bit-exact
+    equivalence is structural, not just test-enforced). Returns
+    ``(q_next, (cost, energy, backlog_total, backlog_avg, f))`` — the scan
+    output contract behind ``SimOutputs``' per-slot columns.
+    """
+    fa = f * arrivals[None, :]
+    cost = jnp.sum(fa * e_cost.T)
+    energy = jnp.sum(fa * e_raw.T)
+    q_next = queue_step(q, f, arrivals, mu)
+    return q_next, (cost, energy, jnp.sum(q_next), jnp.mean(q_next), f)
 
 
 @functools.partial(jax.jit, static_argnames=("policy",))
@@ -118,11 +151,7 @@ def simulate(
             f = policy(sub, q, arrivals, mu, e_cost, aux, scalar)
         else:
             arrivals, mu, e_cost, e_raw, f = xs
-        fa = f * arrivals[None, :]
-        cost = jnp.sum(fa * e_cost.T)
-        energy = jnp.sum(fa * e_raw.T)
-        q_next = queue_step(q, f, arrivals, mu)
-        out = (cost, energy, jnp.sum(q_next), jnp.mean(q_next), f)
+        q_next, out = slot_step(q, f, arrivals, mu, e_cost, e_raw)
         return (q_next, key), out
 
     xs = (inputs.arrivals, inputs.mu, e_cost_all, e_raw_all)

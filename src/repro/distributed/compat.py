@@ -34,9 +34,14 @@ else:
                   check_vma=None):
         del axis_names  # implied by the specs on the old API
         if mesh is None:
-            raise ValueError(
-                "jax<0.5 shard_map requires an explicit concrete mesh"
-            )
+            # jax>=0.5 resolves a missing mesh from the ambient context; the
+            # old API wants it explicit, so resolve it the same way here.
+            mesh = _ambient_physical_mesh()
+            if mesh is None or mesh.empty:
+                raise ValueError(
+                    "jax<0.5 shard_map requires a concrete mesh (pass mesh= "
+                    "or call under `with mesh:`)"
+                )
         kwargs = {}
         if check_vma is not None:
             kwargs["check_rep"] = check_vma
@@ -56,6 +61,14 @@ class _EmptyMesh:
 _EMPTY_MESH = _EmptyMesh()
 
 
+def _ambient_physical_mesh():
+    """jax 0.4.x: the concrete mesh installed by old-style ``with mesh:``."""
+    from jax._src import mesh as _mesh_lib
+
+    env = getattr(getattr(_mesh_lib, "thread_resources", None), "env", None)
+    return getattr(env, "physical_mesh", None)
+
+
 def get_abstract_mesh():
     """The ambient (abstract) mesh, or an empty mesh when none is set."""
     if hasattr(jax.sharding, "get_abstract_mesh"):
@@ -63,5 +76,13 @@ def get_abstract_mesh():
     from jax._src import mesh as _mesh_lib
 
     mesh = _mesh_lib.get_abstract_mesh()
-    # jax 0.4.x initializes the thread-local to a raw tuple, not a mesh.
-    return mesh if hasattr(mesh, "empty") else _EMPTY_MESH
+    if hasattr(mesh, "empty"):
+        return mesh
+    # jax 0.4.x initializes the abstract-mesh thread-local to a raw tuple;
+    # an old-style ``with mesh:`` context registers the concrete mesh in
+    # thread_resources instead — a Mesh answers the same .empty/.axis_names/
+    # .shape queries, so it serves as the ambient mesh here.
+    physical = _ambient_physical_mesh()
+    if physical is not None and not physical.empty:
+        return physical
+    return _EMPTY_MESH

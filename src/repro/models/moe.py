@@ -131,7 +131,10 @@ def moe_ffn(
     """
     cap = expert_capacity(x.shape[1], cfg, capacity_factor)
 
+    # Deferred: importing repro.distributed at module scope is circular
+    # (distributed/__init__ -> sharding -> models.lm -> this module).
     from repro.distributed.compat import get_abstract_mesh
+    from repro.distributed.compat import shard_map as _shard_map
 
     mesh = get_abstract_mesh()
     f = cfg.moe_d_ff or cfg.d_ff
@@ -154,8 +157,6 @@ def moe_ffn(
     def local_fn(xl, wr, wg, wu, wd):
         y, aux = _moe_local(xl, wr, wg, wu, wd, cfg, cap, psum_axis="model")
         return y, jax.lax.pmean(aux, batch_axes)
-
-    from repro.distributed.compat import shard_map as _shard_map
 
     return _shard_map(
         local_fn,

@@ -32,8 +32,8 @@ import jax.numpy as jnp
 from jax import Array
 
 from repro.core.iridium import make_allocation_rebuilder
-from repro.core.queues import queue_step
-from repro.core.simulator import PolicyFn, SimInputs
+from repro.core.simulator import PolicyFn, SimInputs, energy_tables, slot_step
+from repro.placement.replica import sync_cost as replica_sync_cost
 from repro.placement.wan import (
     DEFAULT_ENERGY_PER_GB,
     transfer_cost,
@@ -60,6 +60,10 @@ class PlacementConfig:
         energy_per_gb: WAN energy per GB (job-energy equivalents).
         growth: fraction of each dataset that is fresh ingest per epoch
             (only effective when an ``ingest`` trace is supplied).
+        update_fraction: share of each dataset that every replica beyond the
+            first must absorb as sync updates per epoch (the replication
+            premium of :func:`repro.placement.replica.sync_cost`, charged
+            every epoch against the layout in force).
         size / manager_share / map_share: Iridium rebuild parameters.
             Defaults equal ``build_task_allocation``'s, so default-built
             ``SimInputs.r`` and the per-epoch rebuilds agree; when the
@@ -74,6 +78,7 @@ class PlacementConfig:
     capacity_gb: tuple | None = None
     energy_per_gb: float = DEFAULT_ENERGY_PER_GB
     growth: float = 0.0
+    update_fraction: float = 0.01
     size: float = 1.0
     manager_share: float = 0.3
     map_share: float = 0.6
@@ -113,6 +118,7 @@ class PlacedOutputs(NamedTuple):
     wan_energy: Array      # (E,) WAN energy (job-equivalents)
     wan_gb: Array          # (E,) GB crossing the WAN
     wan_latency_s: Array   # (E,) bottleneck completion time of each move
+    sync_cost: Array       # (E,) $ replication sync premium per epoch
 
 
 @functools.partial(jax.jit, static_argnames=("policy", "rule", "cfg"))
@@ -207,8 +213,9 @@ def simulate_placed(
             d_drift = jnp.where(is_first, d, drifted)
         else:
             d_drift = d
+        wpue_e = om_e * pu_e                                          # (W, N)
         obs = SlowObs(
-            wpue_bar=jnp.mean(om_e * pu_e, axis=0),
+            wpue_bar=jnp.mean(wpue_e, axis=0),
             mu_bar=jnp.mean(mu_e, axis=0),
             q=q, sizes_gb=size_e, capacity_gb=cap,
         )
@@ -219,12 +226,15 @@ def simulate_placed(
         plan = transfer_plan(d_drift, d_new, size_e)                  # (K, N, N)
         wan_c, wan_e, wan_gb = transfer_cost(plan, wan, om_e[0], pu_e[0])
         wan_lat = transfer_latency(plan, wan)
+        # Ongoing replication premium: every epoch, each replica beyond the
+        # first absorbs update_fraction of its dataset at the epoch-mean price.
+        sync_c = replica_sync_cost(
+            d_new, size_e, wan, obs.wpue_bar, cfg.update_fraction
+        )
         r_e = jnp.where(is_first, r0, rebuild(d_new))                 # (K, N, N)
 
         # -- fast timescale: the simulator's slot body against (d_new, r_e).
-        wpue_e = om_e * pu_e                                          # (W, N)
-        e_cost = jnp.einsum("kij,tj->tki", r_e, wpue_e) * p_it[None, :, None]
-        e_raw = jnp.einsum("kij,tj->tki", r_e, pu_e) * p_it[None, :, None]
+        e_cost, e_raw = energy_tables(r_e, wpue_e, pu_e, p_it)
 
         def slot(carry2, xs2):
             q2, key2 = carry2
@@ -234,18 +244,15 @@ def simulate_placed(
                 arrivals, mu, ec, er = xs2
                 key2, sub = jax.random.split(key2)
             f = policy(sub, q2, arrivals, mu, ec, d_new, scalar)
-            fa = f * arrivals[None, :]
-            cost = jnp.sum(fa * ec.T)
-            energy = jnp.sum(fa * er.T)
-            q_next = queue_step(q2, f, arrivals, mu)
-            out = (cost, energy, jnp.sum(q_next), jnp.mean(q_next), f)
+            q_next, out = slot_step(q2, f, arrivals, mu, ec, er)
             return (q_next, key2), out
 
         slot_xs = (arr_e, mu_e, e_cost, e_raw)
         if state_ind:
             slot_xs = slot_xs + (keys_e,)
         (q, key), slot_outs = jax.lax.scan(slot, (q, key), slot_xs)
-        epoch_out = slot_outs + (d_new, r_e, wan_c, wan_e, wan_gb, wan_lat)
+        epoch_out = slot_outs + (d_new, r_e, wan_c, wan_e, wan_gb, wan_lat,
+                                 sync_c)
         return (q, key, d_new), epoch_out
 
     xs = (arr_ep, mu_ep, om_ep, pu_ep, sizes_gb,
@@ -254,7 +261,7 @@ def simulate_placed(
     if state_ind:
         xs = xs + (keys_ep,)
     (q_final, _, _), outs = jax.lax.scan(epoch, (q0, key, d0), xs)
-    cost, energy, btot, bavg, f_trace, d_tr, r_tr, wc, we, wgb, wlat = outs
+    cost, energy, btot, bavg, f_trace, d_tr, r_tr, wc, we, wgb, wlat, sc = outs
     flat = lambda x: x.reshape((t_slots,) + x.shape[2:])
     return PlacedOutputs(
         cost=flat(cost), energy=flat(energy),
@@ -262,6 +269,7 @@ def simulate_placed(
         q_final=q_final, f_trace=flat(f_trace),
         placements=d_tr, r_trace=r_tr,
         wan_cost=wc, wan_energy=we, wan_gb=wgb, wan_latency_s=wlat,
+        sync_cost=sc,
     )
 
 
@@ -300,14 +308,16 @@ def simulate_placed_many(
 
 
 def summarize_placed(outs: PlacedOutputs) -> dict:
-    """Time-averaged scalars incl. the WAN bill (averaged over a runs axis)."""
+    """Time-averaged scalars incl. WAN + sync bills (over any runs axis)."""
     t_slots = outs.cost.shape[-1]
     dispatch = jnp.mean(outs.cost)
     wan_per_slot = jnp.mean(jnp.sum(outs.wan_cost, axis=-1)) / t_slots
+    sync_per_slot = jnp.mean(jnp.sum(outs.sync_cost, axis=-1)) / t_slots
     return {
         "time_avg_dispatch_cost": float(dispatch),
         "time_avg_wan_cost": float(wan_per_slot),
-        "time_avg_total_cost": float(dispatch + wan_per_slot),
+        "time_avg_sync_cost": float(sync_per_slot),
+        "time_avg_total_cost": float(dispatch + wan_per_slot + sync_per_slot),
         "time_avg_energy": float(jnp.mean(outs.energy)),
         "time_avg_backlog": float(jnp.mean(outs.backlog_avg)),
         "total_wan_gb": float(jnp.mean(jnp.sum(outs.wan_gb, axis=-1))),

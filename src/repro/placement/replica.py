@@ -178,9 +178,14 @@ def sync_cost(
 
     Every replica beyond the first must absorb ``update_fraction`` of its
     dataset in updates per epoch, shipped over the WAN at the mean link
-    price.
+    price. Shards below :data:`REPLICA_THRESHOLD` are not materialized
+    (same rule as :func:`replica_read_assignment`): they hold no copy and
+    sync nothing, so the softmin's residue at expensive sites is not billed.
     """
-    extra = jnp.maximum(effective_replicas(data_dist) - 1.0, 0.0)       # (K,)
+    live = jnp.where(data_dist >= REPLICA_THRESHOLD, data_dist, 0.0)    # (K, N)
+    total = jnp.sum(live, axis=1, keepdims=True)
+    live = jnp.where(total > _EPS, live / jnp.maximum(total, _EPS), data_dist)
+    extra = jnp.maximum(effective_replicas(live) - 1.0, 0.0)            # (K,)
     gb = jnp.sum(extra * sizes_gb * update_fraction)
     return gb * wan.energy_per_gb * jnp.mean(wpue)
 

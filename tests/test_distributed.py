@@ -121,6 +121,59 @@ def test_multidevice_train_and_decode_subprocess():
     assert report["decode_finite"]
 
 
+_MOE_MESH_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, "src")
+    import json
+    import jax, jax.numpy as jnp
+    import repro.configs as C
+    from repro.distributed.compat import get_abstract_mesh
+    from repro.models.moe import moe_ffn, _moe_local, expert_capacity
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    mesh_ctx = (lambda m: jax.set_mesh(m)) if hasattr(jax, "set_mesh") else (lambda m: m)
+    cfg = C.get_arch("deepseek-moe-16b", "smoke")
+    d, e = cfg.d_model, cfg.num_experts
+    f = cfg.moe_d_ff or cfg.d_ff
+    k = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(k[0], (4, 16, d), jnp.float32)
+    wr = jax.random.normal(k[1], (d, e), jnp.float32) * 0.02
+    wg = jax.random.normal(k[2], (e, d, f), jnp.float32) * 0.02
+    wu = jax.random.normal(k[3], (e, d, f), jnp.float32) * 0.02
+    wd = jax.random.normal(k[4], (e, f, d), jnp.float32) * 0.02
+
+    y_ref, aux_ref = _moe_local(x, wr, wg, wu, wd, cfg, expert_capacity(16, cfg, 1.25))
+    with mesh_ctx(mesh):
+        ambient = not get_abstract_mesh().empty
+        y, aux = jax.jit(lambda *a: moe_ffn(*a, cfg))(x, wr, wg, wu, wd)
+    print(json.dumps({
+        "ambient": ambient,
+        "dy": float(jnp.max(jnp.abs(y - y_ref))),
+        "daux": abs(float(aux) - float(aux_ref)),
+    }))
+""")
+
+
+@pytest.mark.slow
+def test_moe_manual_shard_map_path_live_subprocess():
+    """The ambient-mesh compat shim must expose the mesh on every jax version,
+    so moe_ffn's manual shard_map path (not the replicating fallback) runs —
+    and agrees with the single-device reference."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", _MOE_MESH_PROG],
+        capture_output=True, text=True, cwd=os.path.dirname(os.path.dirname(__file__)),
+        env=env, timeout=560,
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    report = json.loads(res.stdout.strip().splitlines()[-1])
+    assert report["ambient"], "compat.get_abstract_mesh missed the ambient mesh"
+    assert report["dy"] < 1e-5
+    assert report["daux"] < 1e-6
+
+
 def test_compression_roundtrip_single_pod():
     """n_pods=1 degenerate case: compressed sum == identity + residual."""
     from repro.distributed.compression import _dequantize, _quantize

@@ -282,6 +282,43 @@ def test_adaptive_beats_static_on_drifting_trace(paper_setup):
     assert res["static"]["total_wan_gb"] == 0.0
 
 
+def test_sync_premium_charged_per_epoch(paper_setup):
+    """Spread layouts pay the replication sync bill every epoch (including
+    epoch 0); a fully concentrated layout pays nothing."""
+    cfg, template, _, up, down = paper_setup
+    pol = dispatch_fn(1.0)
+    pcfg = PlacementConfig(
+        epoch_slots=48, update_fraction=0.01,
+        manager_share=cfg.manager_share, map_share=cfg.map_share,
+    )
+    outs = simulate_placed(
+        template, up, down, pol, static_placement_rule, jax.random.key(5), pcfg
+    )
+    # facebook_4dc's initial layout spans several sites -> >1 effective
+    # replica -> a positive sync bill in every epoch, even with no moves.
+    assert (np.asarray(outs.sync_cost) > 0.0).all()
+    assert float(outs.wan_cost.sum()) == 0.0
+
+    one_hot_d = jnp.zeros_like(template.data_dist).at[:, 0].set(1.0)
+    outs1 = simulate_placed(
+        template._replace(data_dist=one_hot_d), up, down, pol,
+        static_placement_rule, jax.random.key(5), pcfg,
+    )
+    assert float(outs1.sync_cost.sum()) == pytest.approx(0.0, abs=1e-6)
+
+    # The premium is linear in update_fraction.
+    outs2 = simulate_placed(
+        template, up, down, pol, static_placement_rule, jax.random.key(5),
+        PlacementConfig(
+            epoch_slots=48, update_fraction=0.02,
+            manager_share=cfg.manager_share, map_share=cfg.map_share,
+        ),
+    )
+    np.testing.assert_allclose(
+        np.asarray(outs2.sync_cost), 2.0 * np.asarray(outs.sync_cost), rtol=1e-5
+    )
+
+
 def test_simulate_placed_rejects_indivisible_horizon(paper_setup):
     cfg, template, _, up, down = paper_setup
     pcfg = PlacementConfig(epoch_slots=50)          # 288 % 50 != 0
@@ -315,3 +352,17 @@ def test_effective_replicas_bounds():
     er = np.asarray(effective_replicas(d))
     assert er[0] == pytest.approx(1.0, rel=1e-5)
     assert er[1] == pytest.approx(4.0, rel=1e-5)
+
+
+def test_sync_cost_ignores_unmaterialized_shards():
+    """Softmin residue below REPLICA_THRESHOLD holds no copy and syncs
+    nothing — same materialization rule as replica_read_assignment."""
+    from repro.placement import sync_cost
+
+    wan = wan_topology(jnp.ones(4), jnp.ones(4))
+    wpue = jnp.full((4,), 20.0)
+    sizes = jnp.array([100.0])
+    residue = jnp.array([[0.985, 0.005, 0.005, 0.005]])
+    assert float(sync_cost(residue, sizes, wan, wpue)) == pytest.approx(0.0)
+    spread = jnp.array([[0.5, 0.5, 0.0, 0.0]])
+    assert float(sync_cost(spread, sizes, wan, wpue)) > 0.0
