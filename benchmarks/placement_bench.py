@@ -11,14 +11,23 @@ replication sync), the WAN and sync bills, and wall-clock per Monte-Carlo
 run for the jit-compiled scan-of-scans engine (compile once, reuse across
 runs — the steady-state number excludes the single compilation, which is
 reported separately).
+
+``--fault`` runs the chaos scenario instead: the same drifting trace, but
+ForestCity drops dead mid-trace (slot 144 of 288, permanently). Both arms
+run the controller's recovery path — backlog re-injection, survivor
+re-replication, emergency WAN billing — and the bench reports the recovery
+bill plus *recovery-time-to-SLO*: how many slots after the loss the fleet
+backlog needs to drain back under 1.5x its pre-loss level.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import N_RUNS, emit
 from repro.configs.facebook_4dc import PaperSimConfig, make_sim_builder
@@ -32,13 +41,57 @@ from repro.placement import (
 )
 from repro.traces.bandwidth import bandwidth_draw
 from repro.traces.drift import dataset_growth_trace, ingest_drift_trace
+from repro.traces.faults import scheduled_failure_trace
 
 EPOCH_SLOTS = 48          # 4 h slow-loop period
 GROWTH_PER_EPOCH = 0.05   # dataset volume growth
 INGEST_FRACTION = 0.25    # share of each dataset that is fresh per epoch
+FAULT_SITE = 1            # ForestCity — where the drifting ingest piles up
+FAULT_SLOT = 144          # noon of the 24 h horizon
+SLO_FACTOR = 1.5          # "recovered" = backlog back under 1.5x pre-loss
 
 
-def main():
+def recovery_time_to_slo(backlog_avg: np.ndarray, t_die: int) -> int:
+    """Slots after ``t_die`` until the run-mean backlog re-enters the SLO.
+
+    The SLO level is ``SLO_FACTOR`` x the mean backlog over the epoch
+    preceding the loss. Returns the horizon remainder if it never recovers.
+    """
+    trace = backlog_avg.mean(axis=0) if backlog_avg.ndim == 2 else backlog_avg
+    pre = float(trace[max(t_die - EPOCH_SLOTS, 0):t_die].mean())
+    slo = SLO_FACTOR * max(pre, 1e-6)
+    post = trace[t_die:]
+    ok = np.nonzero(post <= slo)[0]
+    return int(ok[0]) if ok.size else int(post.size)
+
+
+def _timed_sweep(build, up, down, pol, rule, key, n_runs, pcfg, **kw):
+    t0 = time.perf_counter()
+    outs = simulate_placed_many(build, up, down, pol, rule, key, n_runs,
+                                pcfg, **kw)
+    jax.block_until_ready(outs.cost)
+    first_call_us = (time.perf_counter() - t0) * 1e6
+
+    t0 = time.perf_counter()
+    outs = simulate_placed_many(build, up, down, pol, rule, key, n_runs,
+                                pcfg, **kw)
+    jax.block_until_ready(outs.cost)
+    us_per_run = (time.perf_counter() - t0) * 1e6 / n_runs
+    # The first call pays compilation plus one full sweep; subtracting
+    # the steady-state sweep isolates the one-time compilation.
+    compile_us = max(first_call_us - n_runs * us_per_run, 0.0)
+    return outs, us_per_run, compile_us
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--fault", action="store_true",
+        help="mid-trace site-loss chaos scenario (adaptive-with-recovery "
+             "vs static under the same outage)",
+    )
+    args, _ = parser.parse_known_args(argv)
+
     cfg = PaperSimConfig()
     _, build = make_sim_builder(cfg)
     root = jax.random.key(cfg.trace_seed)
@@ -60,47 +113,52 @@ def main():
     key = jax.random.key(0)
     n_runs = min(N_RUNS, 1000)
 
+    alive = None
+    tag = ""
+    if args.fault:
+        alive = scheduled_failure_trace(
+            cfg.t_slots, cfg.n_sites, [(FAULT_SITE, FAULT_SLOT, None)]
+        )
+        tag = "fault_"
+
     results = {}
     for name, rule in [
         ("static", static_placement_rule),
         ("adaptive", make_adaptive_rule(up, temp=2.0)),
     ]:
-        t0 = time.perf_counter()
-        outs = simulate_placed_many(
+        outs, us_per_run, compile_us = _timed_sweep(
             build, up, down, pol, rule, key, n_runs, pcfg,
-            ingest=ingest, sizes_gb=sizes,
+            ingest=ingest, sizes_gb=sizes, alive=alive,
         )
-        jax.block_until_ready(outs.cost)
-        first_call_us = (time.perf_counter() - t0) * 1e6
-
-        t0 = time.perf_counter()
-        outs = simulate_placed_many(
-            build, up, down, pol, rule, key, n_runs, pcfg,
-            ingest=ingest, sizes_gb=sizes,
-        )
-        jax.block_until_ready(outs.cost)
-        us_per_run = (time.perf_counter() - t0) * 1e6 / n_runs
-        # The first call pays compilation plus one full sweep; subtracting
-        # the steady-state sweep isolates the one-time compilation.
-        compile_us = max(first_call_us - n_runs * us_per_run, 0.0)
-
         s = summarize_placed(outs)
         results[name] = s
-        emit(
-            f"placement_{name}_{n_runs}runs_per_run", us_per_run,
+        derived = (
             f"total_cost={s['time_avg_total_cost']:.1f};"
             f"wan_cost={s['time_avg_wan_cost']:.2f};"
             f"sync_cost={s['time_avg_sync_cost']:.2f};"
             f"wan_gb={s['total_wan_gb']:.0f};"
             f"backlog={s['time_avg_backlog']:.2f};"
-            f"compile_us={compile_us:.0f}",
+            f"compile_us={compile_us:.0f}"
         )
+        if args.fault:
+            ttr = recovery_time_to_slo(np.asarray(outs.backlog_avg),
+                                       FAULT_SLOT)
+            results[name]["recovery_slots_to_slo"] = ttr
+            derived += (
+                f";recovery_cost={s['time_avg_recovery_cost']:.3f}"
+                f";recovery_gb={s['total_recovery_gb']:.0f}"
+                f";recovery_slots_to_slo={ttr}"
+            )
+        emit(f"placement_{tag}{name}_{n_runs}runs_per_run", us_per_run,
+             derived)
 
     saving = 1.0 - (results["adaptive"]["time_avg_total_cost"]
                     / results["static"]["time_avg_total_cost"])
-    emit("placement_adaptive_saving", 0.0, f"saving_frac={saving:.3f}")
+    emit(f"placement_{tag}adaptive_saving", 0.0, f"saving_frac={saving:.3f}")
+    scenario = "site-loss" if args.fault else "drifting"
     assert saving > 0.0, (
-        "adaptive placement must beat STATIC-PLACEMENT on the drifting trace"
+        f"adaptive placement must beat STATIC-PLACEMENT on the {scenario} "
+        "trace"
     )
 
 

@@ -6,6 +6,7 @@ from repro.checkpoint.fault import (
     FailureInjector,
     run_with_restarts,
     drop_site,
+    drop_site_mask,
 )
 
 __all__ = [
@@ -16,4 +17,5 @@ __all__ = [
     "FailureInjector",
     "run_with_restarts",
     "drop_site",
+    "drop_site_mask",
 ]

@@ -33,22 +33,44 @@ class SimulatedFailure(RuntimeError):
 
 @dataclasses.dataclass
 class FailureInjector:
-    """Deterministically fail at given steps (or by seeded coin-flip)."""
+    """Deterministically fail at given steps (or by seeded coin-flip).
+
+    The failure *schedule* is a pure function of the injector's static
+    config — :meth:`fails_at` derives the ``probability`` path's coin from
+    ``(seed, step)`` alone, never from call order — so every injector built
+    with the same config sees the identical outage schedule. ``_fired``
+    only records which scheduled failures this run has already experienced
+    (a transient failure does not recur when the surviving run replays the
+    step); :func:`run_with_restarts` persists it through checkpoint
+    metadata so a *restarted process* does not re-experience them either.
+    """
 
     fail_at_steps: tuple[int, ...] = ()
     probability: float = 0.0
     seed: int = 0
     _fired: set = dataclasses.field(default_factory=set)
 
-    def maybe_fail(self, step: int):
-        if step in self.fail_at_steps and step not in self._fired:
-            self._fired.add(step)
-            raise SimulatedFailure(f"injected failure at step {step}")
+    def fails_at(self, step: int) -> bool:
+        """Pure schedule membership: does the config fail at ``step``?"""
+        if step in self.fail_at_steps:
+            return True
         if self.probability > 0:
             rng = np.random.default_rng((self.seed, step))
-            if rng.random() < self.probability and step not in self._fired:
-                self._fired.add(step)
-                raise SimulatedFailure(f"random failure at step {step}")
+            return bool(rng.random() < self.probability)
+        return False
+
+    def maybe_fail(self, step: int):
+        if step not in self._fired and self.fails_at(step):
+            self._fired.add(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+    def fired_steps(self) -> list[int]:
+        """JSON-serializable record of already-experienced failures."""
+        return sorted(self._fired)
+
+    def mark_fired(self, steps) -> None:
+        """Restore the experienced-failure record (from checkpoint meta)."""
+        self._fired.update(int(s) for s in steps)
 
 
 def run_with_restarts(
@@ -68,7 +90,12 @@ def run_with_restarts(
     state = init_state()
     start = 0
     if manager.latest_step() is not None:
-        state, _, start = manager.restore(state)
+        state, meta, start = manager.restore(state)
+        # A restarted process must see the same failure schedule as the one
+        # it replaced: failures already experienced (and survived) before
+        # the checkpoint must not fire again on replay.
+        if injector is not None:
+            injector.mark_fired(meta.get("fired_steps", ()))
     step = start
     while step < total_steps:
         try:
@@ -79,7 +106,10 @@ def run_with_restarts(
             if manager.should_save(step):
                 # async: disk I/O overlaps the next steps; restore()/wait()
                 # join the in-flight write before any read.
-                manager.save_async(step, state, {"step": step})
+                meta = {"step": step}
+                if injector is not None:
+                    meta["fired_steps"] = injector.fired_steps()
+                manager.save_async(step, state, meta)
                 stats["checkpoints"] += 1
         except SimulatedFailure:
             stats["restarts"] += 1
@@ -122,3 +152,52 @@ def drop_site(q, r, data_dist, dead: int):
     d2 = data_dist[:, keep]
     d2 = d2 / jnp.maximum(d2.sum(-1, keepdims=True), 1e-9)
     return q2, r2, d2, burst
+
+
+def drop_site_mask(q, data_dist, alive, died=None):
+    """Static-shape ``drop_site`` for jit'd control loops (N stays N).
+
+    Where :func:`drop_site` physically removes the dead row (shape change —
+    host-side only), this variant zeroes it under an ``alive`` mask so the
+    placement controller can run it *inside* ``lax.scan``. Same semantics:
+    the dead sites' backlog comes back as an arrival burst, and their
+    dataset share re-distributes proportionally over the surviving
+    replicas. A dataset whose replicas were *all* on dead sites falls back
+    to uniform-over-survivors (restore-from-backup; the WAN bill for it is
+    the caller's to charge).
+
+    Args:
+        q: (N, K) backlogs.
+        data_dist: (K, N) dataset distribution (rows on the simplex).
+        alive: (N,) {0,1} mask of surviving sites.
+        died: optional (N,) {0,1} mask of *newly* dead sites whose backlog
+            forms the burst; defaults to every currently-dead site.
+
+    Returns:
+        (q', d_masked, d_drop, burst):
+          * q'        — (N, K) backlogs, dead rows zeroed;
+          * d_masked  — (K, N) placement with dead shares zeroed (rows sum
+                        to the surviving fraction — what is still held);
+          * d_drop    — (K, N) renormalized survivor placement (rows back
+                        on the simplex — what must be held after recovery);
+          * burst     — (K,) the newly-dead sites' backlog to re-inject.
+    """
+    q = jnp.asarray(q)
+    data_dist = jnp.asarray(data_dist)
+    alive = jnp.asarray(alive, data_dist.dtype)
+    if died is None:
+        died = 1.0 - alive
+    burst = jnp.sum(q * died[:, None], axis=0)                     # (K,)
+    # The wipe must be a select, not `q * alive`: a mask multiply invites
+    # XLA to refuse/fuse the backlog recurrence differently and costs a ULP
+    # against the no-fault program, breaking the all-alive bit-exactness
+    # the controller guarantees.
+    q2 = jnp.where(alive[:, None] > 0.5, q, 0.0)
+    d_masked = data_dist * alive[None, :]                          # (K, N)
+    surviving = jnp.sum(d_masked, axis=1, keepdims=True)           # (K, 1)
+    n_alive = jnp.maximum(jnp.sum(alive), 1.0)
+    uniform = jnp.broadcast_to(alive / n_alive, d_masked.shape)
+    d_drop = jnp.where(
+        surviving > 1e-9, d_masked / jnp.maximum(surviving, 1e-9), uniform
+    )
+    return q2, d_masked, d_drop, burst

@@ -103,6 +103,20 @@ def static_placement_rule(d: Array, obs) -> Array:
     :func:`repro.placement.controller.simulate_placed` as the ``rule``
     operand; the adaptive counterpart is
     :func:`repro.placement.replica.make_adaptive_rule`.
+
+    Survivor-aware: when the controller reports dead sites through
+    ``obs.alive``, the layout renormalizes over the survivors (``drop_site``
+    semantics — a static placement cannot keep data at a site that no
+    longer exists), but it still never *optimizes*. With every site alive
+    the input ``d`` is returned untouched, bit for bit.
     """
-    del obs
-    return d
+    alive = getattr(obs, "alive", None)
+    if alive is None:
+        return d
+    alive = jnp.asarray(alive, d.dtype)
+    masked = d * alive[None, :]
+    held = jnp.sum(masked, axis=1, keepdims=True)
+    n_alive = jnp.maximum(jnp.sum(alive), 1.0)
+    uniform = jnp.broadcast_to(alive / n_alive, masked.shape)
+    dropped = jnp.where(held > 1e-9, masked / jnp.maximum(held, 1e-9), uniform)
+    return jnp.where(jnp.any(alive < 0.5), dropped, d)

@@ -89,6 +89,21 @@ def energy_tables(
     return e_cost * p_it[None, :, None], e_raw * p_it[None, :, None]
 
 
+def energy_row(
+    r: Array, wpue_t: Array, pue_t: Array, p_it: Array
+) -> tuple[Array, Array]:
+    """(K, N) dispatch cost and raw-energy tables for ONE slot.
+
+    The per-slot form of :func:`energy_tables`, for control loops whose
+    ratio tensor changes *inside* an epoch — the placement controller's
+    off-schedule recovery epochs invalidate the precomputed epoch tables,
+    and re-derive each remaining slot's row from the carried ``r``.
+    """
+    e_cost = jnp.einsum("kij,j->ki", r, wpue_t)
+    e_raw = jnp.einsum("kij,j->ki", r, pue_t)
+    return e_cost * p_it[:, None], e_raw * p_it[:, None]
+
+
 def _energy_tables(inputs: SimInputs) -> tuple[Array, Array]:
     """(T,K,N) cost and raw-energy tables for every slot of a trace bundle."""
     return energy_tables(
@@ -106,6 +121,11 @@ def slot_step(
     equivalence is structural, not just test-enforced). Returns
     ``(q_next, (cost, energy, backlog_total, backlog_avg, f))`` — the scan
     output contract behind ``SimOutputs``' per-slot columns.
+
+    Callers feeding this body masked inputs (the controller's fault path)
+    must mask with exact identities (``* 1.0``, ``+ 0.0``) or selects —
+    see ``drop_site_mask`` — so that bitwise-equal inputs keep producing
+    bitwise-equal outputs under XLA's fusion choices.
     """
     fa = f * arrivals[None, :]
     cost = jnp.sum(fa * e_cost.T)

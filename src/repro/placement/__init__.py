@@ -16,7 +16,9 @@ current layout.
 
 The STATIC-PLACEMENT comparison baseline lives with the other baselines in
 :func:`repro.core.baselines.static_placement_rule`; drifting-dataset traces
-come from :mod:`repro.traces.drift`.
+come from :mod:`repro.traces.drift`; site-failure alive masks (the chaos
+scenario class, driving the controller's off-schedule recovery epochs) come
+from :mod:`repro.traces.faults`.
 """
 
 from repro.placement.controller import (
@@ -38,6 +40,7 @@ from repro.placement.replica import (
 )
 from repro.placement.wan import (
     WanModel,
+    evacuation_plan,
     transfer_cost,
     transfer_latency,
     transfer_plan,
@@ -59,6 +62,7 @@ __all__ = [
     "sync_cost",
     "target_placement",
     "WanModel",
+    "evacuation_plan",
     "transfer_cost",
     "transfer_latency",
     "transfer_plan",

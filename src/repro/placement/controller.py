@@ -19,6 +19,19 @@ choose — the scenario of Zhang et al., where placement must adapt over
 time) enters through an optional per-epoch ``ingest`` trace; the controller
 observes the drifted layout and corrects it within its per-epoch move
 budget, paying for every byte through :mod:`repro.placement.wan`.
+
+Site loss (the chaos scenario class, :mod:`repro.traces.faults`) enters
+through an optional per-slot ``alive`` mask. On a death edge the controller
+runs an immediate *off-schedule recovery epoch* inside the fast loop —
+``drop_site`` semantics via :func:`repro.checkpoint.fault.drop_site_mask`:
+the dead sites' backlog re-injects as an arrival burst, their dataset share
+re-replicates over the survivors, the slow rule re-places restricted to
+survivors, and the emergency WAN burst is billed into
+``PlacedOutputs.recovery_cost``. Everything stays one jit'd scan-of-scans
+(the recovery epoch is a select on the mask edge), and with an all-ones
+mask the fault path is bit-exact with the no-fault path — every masking op
+is either an exact float identity (``* 1.0``, ``+ 0.0``) or guarded by a
+``jnp.where`` on the edge condition.
 """
 
 from __future__ import annotations
@@ -31,11 +44,19 @@ import jax
 import jax.numpy as jnp
 from jax import Array
 
+from repro.checkpoint.fault import drop_site_mask
 from repro.core.iridium import make_allocation_rebuilder
-from repro.core.simulator import PolicyFn, SimInputs, energy_tables, slot_step
+from repro.core.simulator import (
+    PolicyFn,
+    SimInputs,
+    energy_row,
+    energy_tables,
+    slot_step,
+)
 from repro.placement.replica import sync_cost as replica_sync_cost
 from repro.placement.wan import (
     DEFAULT_ENERGY_PER_GB,
+    evacuation_plan,
     transfer_cost,
     transfer_latency,
     transfer_plan,
@@ -43,6 +64,19 @@ from repro.placement.wan import (
 )
 
 _EPS = 1e-12
+
+
+def _survivor_renorm(masked: Array, fallback: Array, axis: int = -1) -> Array:
+    """Renormalize a survivor-masked distribution back onto the simplex.
+
+    ``masked`` is a distribution with dead sites already zeroed; rows whose
+    mass sat entirely on dead sites are degenerate (zero sum) and take
+    ``fallback`` instead. The single definition behind every
+    mask-then-renormalize site in the fault path — keep the eps and the
+    degenerate-row semantics in one place.
+    """
+    total = jnp.sum(masked, axis=axis, keepdims=True)
+    return jnp.where(total > _EPS, masked / jnp.maximum(total, _EPS), fallback)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +131,7 @@ class SlowObs(NamedTuple):
     q: Array            # (N, K) backlogs at the boundary
     sizes_gb: Array     # (K,)   dataset sizes this epoch
     capacity_gb: Array  # (N,)   storage caps
+    alive: Array | None = None  # (N,) {0,1} survivors; None = no fault model
 
 
 #: rule(d_current, obs) -> d_target, both (K, N) row-stochastic.
@@ -119,6 +154,8 @@ class PlacedOutputs(NamedTuple):
     wan_gb: Array          # (E,) GB crossing the WAN
     wan_latency_s: Array   # (E,) bottleneck completion time of each move
     sync_cost: Array       # (E,) $ replication sync premium per epoch
+    recovery_cost: Array   # (T,) $ emergency WAN burst on site-loss edges
+    recovery_gb: Array     # (T,) GB evacuated/re-replicated on those edges
 
 
 @functools.partial(jax.jit, static_argnames=("policy", "rule", "cfg"))
@@ -133,6 +170,7 @@ def simulate_placed(
     scalar: float | Array = 0.0,
     ingest: Array | None = None,
     sizes_gb: Array | None = None,
+    alive: Array | None = None,
 ) -> PlacedOutputs:
     """Run the two-timescale controller over one trace.
 
@@ -153,6 +191,15 @@ def simulate_placed(
             with weight ``cfg.growth`` at every boundary after epoch 0.
         sizes_gb: optional (E, K) per-epoch dataset sizes (growth trace);
             defaults to ``cfg.dataset_gb`` for all epochs.
+        alive: optional (T, N) per-slot {0,1} site-alive mask
+            (:mod:`repro.traces.faults`). On each death edge the controller
+            runs an off-schedule recovery epoch: the dead sites' backlog
+            re-injects as an arrival burst, their dataset share
+            re-replicates over the survivors, the rule re-places restricted
+            to survivors, and the emergency WAN burst lands in
+            ``recovery_cost``. Dead sites receive no dispatch and serve
+            nothing while down; an all-ones mask reproduces the no-fault
+            outputs bit for bit.
     """
     t_slots, k_types = inputs.arrivals.shape
     n = inputs.mu.shape[1]
@@ -163,6 +210,18 @@ def simulate_placed(
     if t_slots % w != 0:
         raise ValueError(f"T={t_slots} must be a multiple of W={w}")
     n_epochs = t_slots // w
+
+    faulty = alive is not None
+    if faulty:
+        alive = jnp.asarray(alive, jnp.float32)
+        if alive.shape != (t_slots, n):
+            raise ValueError(f"alive mask must be (T={t_slots}, N={n}), "
+                             f"got {alive.shape}")
+        # Slot 0 compares against an all-alive fleet, so a trace that
+        # starts dead fires its death edge (and recovery) at t=0.
+        alive_prev = jnp.concatenate(
+            [jnp.ones((1, n), jnp.float32), alive[:-1]], axis=0
+        )
 
     wan = wan_topology(up, down, cfg.energy_per_gb)
     rebuild = make_allocation_rebuilder(
@@ -198,15 +257,32 @@ def simulate_placed(
 
     def epoch(carry, xs):
         q, key, d = carry
+        rest = xs[7:]
+        arr_e, mu_e, om_e, pu_e, size_e, ing_e, is_first = xs[:7]
         if state_ind:
-            arr_e, mu_e, om_e, pu_e, size_e, ing_e, is_first, keys_e = xs
-        else:
-            arr_e, mu_e, om_e, pu_e, size_e, ing_e, is_first = xs
+            keys_e, rest = rest[0], rest[1:]
+        if faulty:
+            alive_e, alive_prev_e = rest
+            # Aliveness *entering* the epoch drives the boundary decision;
+            # deaths inside the epoch are handled by the slot-level edges.
+            alive_b = alive_prev_e[0]                                 # (N,)
+            any_dead_b = jnp.any(alive_b < 0.5)
 
         # -- slow timescale: drift, observe, re-place, pay the WAN bill.
         if ingest is not None:
             g = jnp.float32(cfg.growth)
-            drifted = (1.0 - g) * d + g * ing_e
+            ing_used = ing_e
+            if faulty:
+                # Ingest cannot land at dead sites; it redirects to the
+                # survivors (renormalized; a row aimed entirely at dead
+                # sites spreads uniformly over the survivors), only when
+                # any site is down.
+                n_alive_b = jnp.maximum(jnp.sum(alive_b), 1.0)
+                unif_b = jnp.broadcast_to(alive_b / n_alive_b, ing_e.shape)
+                ing_m = _survivor_renorm(ing_e * alive_b[None, :], unif_b,
+                                         axis=1)
+                ing_used = jnp.where(any_dead_b, ing_m, ing_e)
+            drifted = (1.0 - g) * d + g * ing_used
             drifted = drifted / jnp.maximum(
                 jnp.sum(drifted, axis=1, keepdims=True), _EPS
             )
@@ -214,12 +290,21 @@ def simulate_placed(
         else:
             d_drift = d
         wpue_e = om_e * pu_e                                          # (W, N)
+        mu_bar = jnp.mean(mu_e, axis=0)
+        if faulty:
+            mu_bar = mu_bar * alive_b[:, None]   # dead sites serve nothing
         obs = SlowObs(
             wpue_bar=jnp.mean(wpue_e, axis=0),
-            mu_bar=jnp.mean(mu_e, axis=0),
+            mu_bar=mu_bar,
             q=q, sizes_gb=size_e, capacity_gb=cap,
+            alive=alive_b if faulty else None,
         )
         target = rule(d_drift, obs)
+        if faulty:
+            # The controller enforces survivor-only targets regardless of
+            # whether the plugged-in rule is survivor-aware.
+            t_m = _survivor_renorm(target * alive_b[None, :], d_drift, axis=1)
+            target = jnp.where(any_dead_b, t_m, target)
         stepped = d_drift + cfg.move_budget * (target - d_drift)
         stepped = stepped / jnp.maximum(jnp.sum(stepped, axis=1, keepdims=True), _EPS)
         d_new = jnp.where(is_first, d, stepped)
@@ -232,36 +317,114 @@ def simulate_placed(
             d_new, size_e, wan, obs.wpue_bar, cfg.update_fraction
         )
         r_e = jnp.where(is_first, r0, rebuild(d_new))                 # (K, N, N)
+        if faulty:
+            r_m = r_e * alive_b[None, None, :]
+            r_m = r_m / jnp.maximum(jnp.sum(r_m, axis=-1, keepdims=True), _EPS)
+            r_e = jnp.where(any_dead_b, r_m, r_e)
 
         # -- fast timescale: the simulator's slot body against (d_new, r_e).
         e_cost, e_raw = energy_tables(r_e, wpue_e, pu_e, p_it)
 
         def slot(carry2, xs2):
-            q2, key2 = carry2
-            if state_ind:
-                arrivals, mu, ec, er, sub = xs2
+            if faulty:
+                q2, key2, d_c, r_c, fired = carry2
             else:
-                arrivals, mu, ec, er = xs2
+                q2, key2 = carry2
+            arrivals, mu, ec, er = xs2[:4]
+            rest2 = xs2[4:]
+            if state_ind:
+                sub, rest2 = rest2[0], rest2[1:]
+            else:
                 key2, sub = jax.random.split(key2)
-            f = policy(sub, q2, arrivals, mu, ec, d_new, scalar)
+            aux = d_new
+            if faulty:
+                alive_t, alive_prev_t, om_t, pu_t = rest2
+                died = alive_prev_t * (1.0 - alive_t)                 # (N,)
+                any_died = jnp.any(died > 0.5)
+                any_dead = jnp.any(alive_t < 0.5)
+                wpue_t = om_t * pu_t
+                # drop_site semantics, static-shape: wipe dead queues, form
+                # the re-injection burst, renormalize the survivor layout.
+                q2, d_masked, d_drop, burst = drop_site_mask(
+                    q2, d_c, alive_t, died
+                )
+                arrivals = arrivals + burst
+                mu = mu * alive_t[:, None]
+                # ---- the off-schedule recovery epoch (a select on the
+                # death edge): rule re-places restricted to survivors, the
+                # evacuation + move burst is billed at this slot's prices.
+                obs_r = SlowObs(
+                    wpue_bar=wpue_t, mu_bar=mu, q=q2,
+                    sizes_gb=size_e, capacity_gb=cap, alive=alive_t,
+                )
+                tgt = _survivor_renorm(
+                    rule(d_drop, obs_r) * alive_t[None, :], d_drop, axis=1
+                )
+                d_rec = d_drop + cfg.move_budget * (tgt - d_drop)
+                d_rec = d_rec / jnp.maximum(
+                    jnp.sum(d_rec, axis=1, keepdims=True), _EPS
+                )
+                rec_plan = (evacuation_plan(d_masked, d_drop, size_e)
+                            + transfer_plan(d_drop, d_rec, size_e))
+                rec_c, _, rec_g = transfer_cost(rec_plan, wan, om_t, pu_t)
+                r_rec = rebuild(d_rec) * alive_t[None, None, :]
+                r_rec = r_rec / jnp.maximum(
+                    jnp.sum(r_rec, axis=-1, keepdims=True), _EPS
+                )
+                d_c = jnp.where(any_died, d_rec, d_c)
+                r_c = jnp.where(any_died, r_rec, r_c)
+                fired = jnp.logical_or(fired, any_died)
+                rec_cost = jnp.where(any_died, rec_c, 0.0)
+                rec_gb = jnp.where(any_died, rec_g, 0.0)
+                # Epoch tables go stale the moment a recovery re-places
+                # mid-epoch; re-derive this slot's row from the carried r.
+                ec_f, er_f = energy_row(r_c, wpue_t, pu_t, p_it)
+                ec = jnp.where(fired, ec_f, ec)
+                er = jnp.where(fired, er_f, er)
+                aux = d_c
+            f = policy(sub, q2, arrivals, mu, ec, aux, scalar)
+            if faulty:
+                # No dispatch mass to dead sites, whatever the policy says.
+                n_alive = jnp.maximum(jnp.sum(alive_t), 1.0)
+                f_fb = jnp.broadcast_to((alive_t / n_alive)[:, None], f.shape)
+                f_m = _survivor_renorm(f * alive_t[:, None], f_fb, axis=0)
+                f = jnp.where(any_dead, f_m, f)
             q_next, out = slot_step(q2, f, arrivals, mu, ec, er)
+            if faulty:
+                return (q_next, key2, d_c, r_c, fired), out + (rec_cost, rec_gb)
             return (q_next, key2), out
 
         slot_xs = (arr_e, mu_e, e_cost, e_raw)
         if state_ind:
             slot_xs = slot_xs + (keys_e,)
-        (q, key), slot_outs = jax.lax.scan(slot, (q, key), slot_xs)
+        if faulty:
+            slot_xs = slot_xs + (alive_e, alive_prev_e, om_e, pu_e)
+            carry0 = (q, key, d_new, r_e, jnp.bool_(False))
+            (q, key, d_carry, _, _), slot_outs = jax.lax.scan(
+                slot, carry0, slot_xs
+            )
+        else:
+            (q, key), slot_outs = jax.lax.scan(slot, (q, key), slot_xs)
+            d_carry = d_new
         epoch_out = slot_outs + (d_new, r_e, wan_c, wan_e, wan_gb, wan_lat,
                                  sync_c)
-        return (q, key, d_new), epoch_out
+        return (q, key, d_carry), epoch_out
 
     xs = (arr_ep, mu_ep, om_ep, pu_ep, sizes_gb,
           ingest if ingest is not None else jnp.zeros((n_epochs, k_types, n)),
           first)
     if state_ind:
         xs = xs + (keys_ep,)
+    if faulty:
+        xs = xs + (ep(alive), ep(alive_prev))
     (q_final, _, _), outs = jax.lax.scan(epoch, (q0, key, d0), xs)
-    cost, energy, btot, bavg, f_trace, d_tr, r_tr, wc, we, wgb, wlat, sc = outs
+    if faulty:
+        (cost, energy, btot, bavg, f_trace, rec_cost, rec_gb,
+         d_tr, r_tr, wc, we, wgb, wlat, sc) = outs
+    else:
+        cost, energy, btot, bavg, f_trace, d_tr, r_tr, wc, we, wgb, wlat, sc = outs
+        rec_cost = jnp.zeros((n_epochs, w), jnp.float32)
+        rec_gb = jnp.zeros((n_epochs, w), jnp.float32)
     flat = lambda x: x.reshape((t_slots,) + x.shape[2:])
     return PlacedOutputs(
         cost=flat(cost), energy=flat(energy),
@@ -270,6 +433,7 @@ def simulate_placed(
         placements=d_tr, r_trace=r_tr,
         wan_cost=wc, wan_energy=we, wan_gb=wgb, wan_latency_s=wlat,
         sync_cost=sc,
+        recovery_cost=flat(rec_cost), recovery_gb=flat(rec_gb),
     )
 
 
@@ -288,12 +452,13 @@ def simulate_placed_many(
     scalar: float | Array = 0.0,
     ingest: Array | None = None,
     sizes_gb: Array | None = None,
+    alive: Array | None = None,
 ) -> PlacedOutputs:
     """Monte-Carlo replication of :func:`simulate_placed` (vmap over keys).
 
     Mirrors ``simulate_many``: fresh stochastic traces + policy randomness
-    per run, deterministic traces (prices, PUE, drift) shared. One
-    compilation serves every run.
+    per run, deterministic traces (prices, PUE, drift, the site-alive mask)
+    shared. One compilation serves every run.
     """
     keys = jax.random.split(key, n_runs)
 
@@ -301,26 +466,31 @@ def simulate_placed_many(
         k_build, k_sim = jax.random.split(run_key)
         return simulate_placed(
             build_inputs(k_build), up, down, policy, rule, k_sim, cfg,
-            scalar=scalar, ingest=ingest, sizes_gb=sizes_gb,
+            scalar=scalar, ingest=ingest, sizes_gb=sizes_gb, alive=alive,
         )
 
     return jax.vmap(one)(keys)
 
 
 def summarize_placed(outs: PlacedOutputs) -> dict:
-    """Time-averaged scalars incl. WAN + sync bills (over any runs axis)."""
+    """Time-averaged scalars incl. WAN/sync/recovery bills (any runs axis)."""
     t_slots = outs.cost.shape[-1]
     dispatch = jnp.mean(outs.cost)
     wan_per_slot = jnp.mean(jnp.sum(outs.wan_cost, axis=-1)) / t_slots
     sync_per_slot = jnp.mean(jnp.sum(outs.sync_cost, axis=-1)) / t_slots
+    recovery_per_slot = jnp.mean(outs.recovery_cost)
     return {
         "time_avg_dispatch_cost": float(dispatch),
         "time_avg_wan_cost": float(wan_per_slot),
         "time_avg_sync_cost": float(sync_per_slot),
-        "time_avg_total_cost": float(dispatch + wan_per_slot + sync_per_slot),
+        "time_avg_recovery_cost": float(recovery_per_slot),
+        "time_avg_total_cost": float(
+            dispatch + wan_per_slot + sync_per_slot + recovery_per_slot
+        ),
         "time_avg_energy": float(jnp.mean(outs.energy)),
         "time_avg_backlog": float(jnp.mean(outs.backlog_avg)),
         "total_wan_gb": float(jnp.mean(jnp.sum(outs.wan_gb, axis=-1))),
+        "total_recovery_gb": float(jnp.mean(jnp.sum(outs.recovery_gb, axis=-1))),
         "max_move_latency_s": float(jnp.max(outs.wan_latency_s)),
         "final_backlog_total": float(jnp.mean(outs.q_final.sum(axis=(-2, -1)))),
     }

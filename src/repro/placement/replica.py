@@ -35,6 +35,11 @@ _EPS = 1e-12
 #: the site (it cannot serve reads, it incurs no sync traffic).
 REPLICA_THRESHOLD = 0.01
 
+#: Hosting-score penalty added to dead sites (same units as the scores,
+#: $/MWh-equivalents): large enough that the softmin underflows to exactly
+#: zero preference there at any realistic temperature.
+DEAD_SITE_PENALTY = 1e6
+
 
 def hosting_scores(
     wpue_bar: Array,
@@ -214,8 +219,18 @@ def make_adaptive_rule(
             obs.wpue_bar, cap_share, up,
             colo_weight=colo_weight, net_weight=net_weight,
         )
+        capacity_gb = obs.capacity_gb
+        alive = getattr(obs, "alive", None)
+        if alive is not None:
+            # Survivor-aware: dead sites can neither host (score penalty
+            # underflows the softmin to 0 there) nor store (zero cap for
+            # the projection). With every site alive both terms are exact
+            # no-ops, keeping the no-fault path bit-exact.
+            alive = jnp.asarray(alive, jnp.float32)
+            scores = scores + DEAD_SITE_PENALTY * (1.0 - alive)[None, :]
+            capacity_gb = jnp.where(alive < 0.5, 0.0, capacity_gb)
         return target_placement(
-            scores, obs.sizes_gb, obs.capacity_gb,
+            scores, obs.sizes_gb, capacity_gb,
             temp=temp, project_iters=project_iters,
         )
 

@@ -81,6 +81,41 @@ def transfer_plan(d_old: Array, d_new: Array, sizes_gb: Array) -> Array:
     return out_gb[:, :, None] * share[:, None, :]                # (K, N, N)
 
 
+def evacuation_plan(
+    d_masked: Array, d_drop: Array, sizes_gb: Array
+) -> Array:
+    """(K, N, N) emergency re-replication traffic after a site loss.
+
+    When sites die, the surviving replicas re-share the dataset
+    (``d_drop``, rows on the simplex) but each survivor only *holds*
+    ``d_masked`` (rows sum to the surviving fraction) — the gap
+    ``(d_drop - d_masked) * sizes_gb`` must be shipped to every growing
+    survivor, sourced from the sites that still hold a copy,
+    proportionally to their holdings and never from the receiver itself.
+    A dataset whose replicas were all lost (``d_masked`` row ~ 0) is
+    restored from the target layout's own source mix (restore-from-backup:
+    the full dataset crosses the WAN). Zero diagonal, so the result can be
+    summed with :func:`transfer_plan` output and priced by
+    :func:`transfer_cost` / :func:`transfer_latency` as one burst.
+
+    Args:
+        d_masked: (K, N) surviving holdings (``drop_site_mask``'s second
+            output — dead columns zeroed, NOT renormalized).
+        d_drop: (K, N) survivor layout after renormalization (rows sum 1).
+        sizes_gb: (K,) dataset sizes in GB.
+
+    Returns:
+        (K, N, N) plan with plan[k, i, j] GB moving i -> j.
+    """
+    n = d_masked.shape[1]
+    need = jnp.maximum(d_drop - d_masked, 0.0) * sizes_gb[:, None]   # (K, N)
+    lost_all = jnp.sum(d_masked, axis=1, keepdims=True) <= 1e-9
+    src = jnp.where(lost_all, d_drop, d_masked)                      # (K, N)
+    w = src[:, :, None] * (1.0 - jnp.eye(n, dtype=src.dtype))[None]  # (K,i,j)
+    w = w / jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-12)
+    return w * need[:, None, :]
+
+
 def transfer_cost(
     plan_gb: Array, wan: WanModel, omega: Array, pue: Array
 ) -> tuple[Array, Array, Array]:

@@ -9,6 +9,8 @@ Control-plane traces (paper Sec. V-A experimental setup):
     * :mod:`repro.traces.datasets`  — per-type dataset distributions & service rates.
     * :mod:`repro.traces.drift`     — slow-timescale dataset drift/growth (feeds
       the repro.placement two-timescale controller).
+    * :mod:`repro.traces.faults`    — seeded site-failure/recovery alive masks
+      (the chaos scenario class; feeds the controller's recovery epochs).
 
 Training-data pipeline (used by repro.train):
     * :mod:`repro.traces.tokens`    — deterministic synthetic token corpus,
@@ -21,6 +23,11 @@ from repro.traces.pue import pue_trace
 from repro.traces.bandwidth import bandwidth_draw
 from repro.traces.datasets import dataset_distribution, service_rate_trace
 from repro.traces.drift import dataset_growth_trace, ingest_drift_trace
+from repro.traces.faults import (
+    failure_edges,
+    scheduled_failure_trace,
+    site_failure_trace,
+)
 
 __all__ = [
     "poisson_arrivals",
@@ -34,4 +41,7 @@ __all__ = [
     "service_rate_trace",
     "dataset_growth_trace",
     "ingest_drift_trace",
+    "failure_edges",
+    "scheduled_failure_trace",
+    "site_failure_trace",
 ]

@@ -1,0 +1,107 @@
+"""Seeded site-failure / recovery traces (the chaos scenario class).
+
+The reliability gap of geo-distributed analytics (Zhang et al., reliable
+geo-distributed executions) is site loss: a whole DC drops out of the fleet
+— power event, WAN partition, regional outage — and the control plane must
+re-place data and re-dispatch the lost backlog over the survivors. These
+generators produce the per-slot **alive mask** consumed by
+:func:`repro.placement.controller.simulate_placed`:
+
+* :func:`site_failure_trace` — a seeded Markov on/off process per site:
+  alive sites die with ``failure_prob`` per slot, dead sites come back after
+  ``repair_slots`` (``None`` = permanent loss). Never kills below
+  ``min_alive`` survivors, so the control plane always has somewhere to
+  evacuate to.
+* :func:`scheduled_failure_trace` — deterministic (site, down_at, up_at)
+  events for regression tests and benchmarks.
+
+Masks are (T, N) float32 in {0, 1}; 1 = alive. An all-ones mask is the
+no-fault scenario and the controller's fault path is bit-exact with its
+no-fault path on it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+
+def site_failure_trace(
+    key: Array,
+    t_slots: int,
+    n_sites: int,
+    failure_prob: float = 0.002,
+    repair_slots: int | None = None,
+    min_alive: int = 1,
+) -> Array:
+    """(T, N) seeded alive mask: per-slot death coins + timed repair.
+
+    Each alive site dies independently with ``failure_prob`` per slot; a
+    dead site stays down for ``repair_slots`` slots and then revives
+    (``None`` = it never comes back). Any slot whose deaths would leave
+    fewer than ``min_alive`` survivors suppresses that slot's deaths
+    entirely — the fleet never loses its last evacuation target.
+
+    Deterministic given ``key``: the same seed replays the same outage
+    schedule (the alive-mask analogue of the seeded-by-step data pipeline).
+    """
+    if not 0 <= min_alive <= n_sites:
+        raise ValueError(f"min_alive={min_alive} out of range for N={n_sites}")
+    # repair_slots=0 would revive in the same slot the site died (no-op
+    # failures); treat it as permanent=False with a 1-slot floor.
+    repair = 0 if repair_slots is None else max(int(repair_slots), 1)
+    permanent = repair_slots is None
+    keys = jax.random.split(key, t_slots)
+
+    def slot(down_left, kk):
+        # down_left[i] > 0 <=> site i is dead for that many more slots.
+        alive = (down_left == 0)
+        coins = jax.random.uniform(kk, (n_sites,))
+        dies = alive & (coins < failure_prob)
+        survivors_after = jnp.sum(alive) - jnp.sum(dies)
+        dies = jnp.where(survivors_after >= min_alive, dies, False)
+        new_down = jnp.where(
+            dies,
+            jnp.iinfo(jnp.int32).max if permanent else repair,
+            jnp.maximum(down_left - 1, 0),
+        )
+        # A site is alive *this slot* unless it is (still) down after the
+        # decrement or died this slot.
+        alive_now = (new_down == 0)
+        return new_down, alive_now.astype(jnp.float32)
+
+    _, mask = jax.lax.scan(slot, jnp.zeros((n_sites,), jnp.int32), keys)
+    return mask                                                   # (T, N)
+
+
+def scheduled_failure_trace(
+    t_slots: int,
+    n_sites: int,
+    events: list[tuple[int, int, int | None]],
+) -> Array:
+    """(T, N) alive mask from explicit (site, down_at, up_at) events.
+
+    ``up_at=None`` means the site never recovers. Slots are half-open:
+    site is dead for ``down_at <= t < up_at``.
+    """
+    mask = np.ones((t_slots, n_sites), np.float32)
+    for site, down_at, up_at in events:
+        if not 0 <= site < n_sites:
+            raise ValueError(f"site {site} out of range for N={n_sites}")
+        end = t_slots if up_at is None else min(up_at, t_slots)
+        mask[down_at:end, site] = 0.0
+    return jnp.asarray(mask)
+
+
+def failure_edges(alive: Array) -> Array:
+    """(T, N) mask of death edges: 1 where a site is newly dead this slot.
+
+    Slot 0 compares against an all-alive fleet, so a trace that starts with
+    a dead site fires its edge at t=0 — the controller's recovery epoch
+    triggers exactly on these edges.
+    """
+    alive = jnp.asarray(alive, jnp.float32)
+    prev = jnp.concatenate([jnp.ones_like(alive[:1]), alive[:-1]], axis=0)
+    return prev * (1.0 - alive)

@@ -82,6 +82,82 @@ def test_run_with_restarts_replays_identically(tmp_path):
     np.testing.assert_array_equal(clean["hist"], failed["hist"])
 
 
+def test_failure_schedule_is_pure_in_seed_and_step():
+    """The probability path derives firing purely from (seed, step): every
+    injector built with the same config sees the identical outage schedule,
+    regardless of call order or how many times a step is queried."""
+    a = FailureInjector(probability=0.2, seed=42)
+    b = FailureInjector(probability=0.2, seed=42)
+    sched_a = [a.fails_at(s) for s in range(200)]
+    sched_b = [b.fails_at(s) for s in reversed(range(200))][::-1]
+    assert sched_a == sched_b
+    assert any(sched_a) and not all(sched_a)
+    # Re-querying the same step never re-rolls a different coin.
+    assert all(a.fails_at(7) == a.fails_at(7) for _ in range(5))
+    # A different seed gives a different schedule.
+    c = FailureInjector(probability=0.2, seed=43)
+    assert sched_a != [c.fails_at(s) for s in range(200)]
+
+
+def test_restarted_process_replays_identical_failure_schedule(tmp_path):
+    """Process death + fresh injector: the restarted run must not
+    re-experience failures the original already survived (the fired set
+    travels through checkpoint metadata), and must reach the exact state
+    of a never-failed run."""
+
+    def init_state():
+        return {"x": jnp.float32(0.0), "hist": jnp.zeros((64,))}
+
+    def step_fn(state, step):
+        rng = np.random.default_rng((7, step))   # seeded-by-step pipeline
+        inc = float(rng.uniform())
+        return {
+            "x": state["x"] + inc,
+            "hist": state["hist"].at[step].set(inc),
+        }
+
+    # Seed chosen so the schedule fires in both halves of the run
+    # (fails_at(seed=0) -> steps 7, 29, 38, 53).
+    seed, prob, total = 0, 0.04, 60
+    probe = FailureInjector(probability=prob, seed=seed)
+    sched = [s for s in range(total) if probe.fails_at(s)]
+    assert sched, "pick a seed whose schedule actually fires"
+
+    clean, _ = run_with_restarts(
+        init_state, step_fn, CheckpointManager(tmp_path / "a", save_interval=8),
+        total_steps=total,
+    )
+
+    # Process 1: survives its scheduled failures (in-memory fired set),
+    # checkpoints along the way, then "dies" for good mid-run.
+    mgr_dir = tmp_path / "b"
+    injector1 = FailureInjector(probability=prob, seed=seed)
+    half = max(sched[0] + 8, total // 2)
+    state1, stats1 = run_with_restarts(
+        init_state, step_fn, CheckpointManager(mgr_dir, save_interval=8),
+        total_steps=half, injector=injector1,
+    )
+    fired_before = set(injector1.fired_steps())
+    assert stats1["restarts"] == len([s for s in sched if s < half])
+
+    # Process 2: a FRESH injector (empty in-memory state) resumes from the
+    # on-disk checkpoint. Failures already survived before the checkpoint
+    # must not fire again on replay; later scheduled ones still do.
+    injector2 = FailureInjector(probability=prob, seed=seed)
+    mgr2 = CheckpointManager(mgr_dir, save_interval=8)
+    resumed_at = mgr2.latest_step()
+    failed, stats2 = run_with_restarts(
+        init_state, step_fn, mgr2, total_steps=total, injector=injector2,
+    )
+    replayed_old = [s for s in fired_before if s >= resumed_at]
+    fresh = [s for s in sched if s >= half]
+    assert stats2["restarts"] == len(replayed_old) + len(fresh), (
+        sched, resumed_at, stats2
+    )
+    np.testing.assert_allclose(clean["x"], failed["x"], rtol=1e-6)
+    np.testing.assert_array_equal(clean["hist"], failed["hist"])
+
+
 def test_injector_exhausts_restarts(tmp_path):
     injector = FailureInjector(fail_at_steps=(0,))
     with pytest.raises(SimulatedFailure):

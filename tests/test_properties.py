@@ -8,11 +8,24 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro.checkpoint.fault import drop_site_mask
 from repro.core.energy import manager_energy_cost, slot_cost
 from repro.core.gmsa import gmsa_dispatch, lyapunov_drift_bound_B
 from repro.core.iridium import iridium_reduce_placement
 from repro.core.queues import lyapunov, queue_step
-from repro.core.baselines import random_dispatch
+from repro.core.baselines import random_dispatch, static_placement_rule
+from repro.placement import (
+    capacity_project,
+    evacuation_plan,
+    replica_read_assignment,
+    sync_cost,
+    transfer_cost,
+    transfer_latency,
+    transfer_plan,
+    wan_topology,
+)
+from repro.placement.controller import SlowObs
+from repro.placement.replica import REPLICA_THRESHOLD
 
 
 small = st.floats(0, 100, allow_nan=False, width=32)
@@ -128,3 +141,183 @@ def test_random_dispatch_is_exact_multinomial(seed, k):
     np.testing.assert_allclose(np.asarray(f).sum(axis=0), 1.0, atol=1e-5)
     counts = np.asarray(f) * np.asarray(a)[None, :]
     np.testing.assert_allclose(counts, np.round(counts), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Placement-layer invariants (repro.placement.wan / .replica) — slow suite
+# ---------------------------------------------------------------------------
+
+def _simplex(rng, k, n):
+    return jnp.asarray(rng.dirichlet(np.ones(n), k), jnp.float32)
+
+
+@pytest.mark.slow
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(2, 7), k=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_transfer_plan_conserves_shard_mass(n, k, seed):
+    """Exports/imports match the placement delta exactly; nothing rides the
+    diagonal; no negative flows."""
+    rng = np.random.default_rng(seed)
+    d_old = _simplex(rng, k, n)
+    d_new = _simplex(rng, k, n)
+    sizes = jnp.asarray(rng.uniform(1.0, 500.0, k), jnp.float32)
+    plan = np.asarray(transfer_plan(d_old, d_new, sizes))           # (K,N,N)
+    assert (plan >= 0).all()
+    out_gb = np.maximum(np.asarray(d_old - d_new), 0) * np.asarray(sizes)[:, None]
+    in_gb = np.maximum(np.asarray(d_new - d_old), 0) * np.asarray(sizes)[:, None]
+    np.testing.assert_allclose(plan.sum(2), out_gb, atol=1e-3)
+    np.testing.assert_allclose(plan.sum(1), in_gb, atol=1e-3)
+    for kk in range(k):
+        assert float(np.trace(plan[kk])) == pytest.approx(0.0, abs=1e-6)
+
+
+@pytest.mark.slow
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(2, 6), k=st.integers(1, 3), seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(1.0, 10.0))
+def test_transfer_cost_nonnegative_and_monotone_in_price(n, k, seed, scale):
+    """Costs/latencies are non-negative; cost is linear in energy_per_gb and
+    monotone (elementwise) in the price vector."""
+    rng = np.random.default_rng(seed)
+    up = jnp.asarray(rng.uniform(0.1, 2.0, n), jnp.float32)
+    down = jnp.asarray(rng.uniform(0.1, 2.0, n), jnp.float32)
+    plan = transfer_plan(_simplex(rng, k, n), _simplex(rng, k, n),
+                         jnp.asarray(rng.uniform(1, 200, k), jnp.float32))
+    omega = jnp.asarray(rng.uniform(5, 50, n), jnp.float32)
+    pue = jnp.asarray(rng.uniform(1.0, 1.3, n), jnp.float32)
+    w1 = wan_topology(up, down, energy_per_gb=0.01)
+    w2 = wan_topology(up, down, energy_per_gb=0.03)
+    c1, e1, gb = transfer_cost(plan, w1, omega, pue)
+    assert float(c1) >= 0 and float(e1) >= 0 and float(gb) >= 0
+    c2, e2, _ = transfer_cost(plan, w2, omega, pue)
+    np.testing.assert_allclose(float(c2), 3 * float(c1), rtol=1e-5)
+    np.testing.assert_allclose(float(e2), 3 * float(e1), rtol=1e-5)
+    c_hi, _, _ = transfer_cost(plan, w1, omega * scale, pue)
+    assert float(c_hi) >= float(c1) * 0.999
+    np.testing.assert_allclose(float(c_hi), scale * float(c1), rtol=1e-4)
+    lat = transfer_latency(plan, w1)
+    assert float(lat) >= 0 and np.isfinite(float(lat))
+
+
+@pytest.mark.slow
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(2, 7), k=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_drop_renormalization_stays_on_simplex(n, k, seed):
+    """drop_site_mask keeps placements on the simplex with zero mass at dead
+    sites, and the evacuation plan exactly closes the holding gap."""
+    rng = np.random.default_rng(seed)
+    d = _simplex(rng, k, n)
+    n_dead = int(rng.integers(1, n))                  # always >= 1 survivor
+    dead = rng.choice(n, n_dead, replace=False)
+    alive = jnp.asarray(np.isin(np.arange(n), dead, invert=True), jnp.float32)
+    q = jnp.asarray(rng.uniform(0, 50, (n, k)), jnp.float32)
+    q2, d_masked, d_drop, burst = drop_site_mask(q, d, alive)
+    d_drop_np = np.asarray(d_drop)
+    np.testing.assert_allclose(d_drop_np.sum(1), 1.0, atol=1e-4)
+    assert (d_drop_np >= -1e-7).all()
+    assert float(np.abs(d_drop_np[:, dead]).max()) == 0.0
+    assert float(np.asarray(q2)[dead].sum()) == 0.0
+    np.testing.assert_allclose(
+        np.asarray(burst), np.asarray(q)[dead].sum(0), rtol=1e-5
+    )
+    sizes = jnp.asarray(rng.uniform(1, 300, k), jnp.float32)
+    plan = np.asarray(evacuation_plan(d_masked, d_drop, sizes))
+    assert (plan >= 0).all()
+    # Receivers with at least one surviving *peer* holding data get their
+    # holding gap closed exactly over the WAN; a receiver that is the sole
+    # surviving holder restores from local backup instead (no WAN bytes).
+    gap = np.maximum(np.asarray(d_drop - d_masked), 0) * np.asarray(sizes)[:, None]
+    src = np.asarray(jnp.where(
+        jnp.sum(d_masked, axis=1, keepdims=True) <= 1e-9, d_drop, d_masked
+    ))
+    peer_mass = src.sum(1, keepdims=True) - src              # (K, N)
+    expected = gap * np.minimum(peer_mass / 1e-12, 1.0)
+    np.testing.assert_allclose(plan.sum(1), expected, atol=1e-3)
+    # Dead sites neither send nor receive.
+    assert float(np.abs(plan[:, dead, :]).sum()) == 0.0
+    assert float(np.abs(plan[:, :, dead]).sum()) == 0.0
+
+
+@pytest.mark.slow
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(2, 6), k=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_survivor_placement_respects_storage_caps(n, k, seed):
+    """After drop_site renormalization, capacity projection still lands on
+    the simplex and within per-site caps (feasible totals provisioned)."""
+    rng = np.random.default_rng(seed)
+    d = _simplex(rng, k, n)
+    dead = int(rng.integers(0, n))
+    alive = jnp.ones((n,)).at[dead].set(0.0)
+    if n == 1 + int(jnp.sum(1 - alive)):              # never kill everyone
+        alive = jnp.ones((n,))
+    _, _, d_drop, _ = drop_site_mask(jnp.zeros((n, k)), d, alive)
+    sizes = jnp.asarray(rng.uniform(10, 100, k), jnp.float32)
+    # Provision survivors with 2x headroom so the projection is feasible.
+    n_alive = float(jnp.sum(alive))
+    cap_each = 2.0 * float(sizes.sum()) / max(n_alive, 1.0)
+    caps = jnp.where(alive > 0.5, cap_each, 0.0)
+    p = np.asarray(capacity_project(d_drop, sizes, caps))
+    np.testing.assert_allclose(p.sum(1), 1.0, atol=1e-3)
+    assert (p >= -1e-6).all()
+    load = (p * np.asarray(sizes)[:, None]).sum(0)
+    assert (load <= np.asarray(caps) * 1.02 + 1e-3).all(), load
+
+
+@pytest.mark.slow
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(2, 6), k=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_static_rule_survivor_aware(n, k, seed):
+    """With obs.alive the STATIC rule renormalizes over survivors (simplex,
+    zero at dead); with all alive it returns its input bit for bit."""
+    rng = np.random.default_rng(seed)
+    d = _simplex(rng, k, n)
+    obs_alive = SlowObs(
+        wpue_bar=jnp.ones(n), mu_bar=jnp.ones((n, k)), q=jnp.zeros((n, k)),
+        sizes_gb=jnp.ones(k), capacity_gb=jnp.full((n,), jnp.inf),
+        alive=jnp.ones((n,)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(static_placement_rule(d, obs_alive)), np.asarray(d)
+    )
+    dead = int(rng.integers(0, n))
+    obs_dead = obs_alive._replace(alive=jnp.ones((n,)).at[dead].set(0.0))
+    out = np.asarray(static_placement_rule(d, obs_dead))
+    np.testing.assert_allclose(out.sum(1), 1.0, atol=1e-4)
+    assert float(np.abs(out[:, dead]).max()) == 0.0
+
+
+@pytest.mark.slow
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(2, 6), k=st.integers(1, 3), seed=st.integers(0, 2**31 - 1),
+       uf=st.floats(0.001, 0.2))
+def test_sync_cost_nonnegative_and_monotone(n, k, seed, uf):
+    rng = np.random.default_rng(seed)
+    d = _simplex(rng, k, n)
+    sizes = jnp.asarray(rng.uniform(1, 300, k), jnp.float32)
+    wan = wan_topology(jnp.asarray(rng.uniform(0.1, 2, n), jnp.float32),
+                       jnp.asarray(rng.uniform(0.1, 2, n), jnp.float32))
+    wpue = jnp.asarray(rng.uniform(5, 50, n), jnp.float32)
+    c1 = float(sync_cost(d, sizes, wan, wpue, uf))
+    c2 = float(sync_cost(d, sizes, wan, wpue, 2 * uf))
+    assert c1 >= 0
+    np.testing.assert_allclose(c2, 2 * c1, rtol=1e-5)
+
+
+@pytest.mark.slow
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(2, 6), k=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_replica_read_assignment_picks_live_hosts(n, k, seed):
+    """Selections are one-hot and never point at an unmaterialized shard
+    (as long as each dataset has at least one live replica)."""
+    rng = np.random.default_rng(seed)
+    d = _simplex(rng, k, n)
+    wan = wan_topology(jnp.asarray(rng.uniform(0.1, 2, n), jnp.float32),
+                       jnp.asarray(rng.uniform(0.1, 2, n), jnp.float32))
+    wpue = jnp.asarray(rng.uniform(5, 50, n), jnp.float32)
+    sel = np.asarray(replica_read_assignment(d, wan, wpue))        # (K,N,N)
+    np.testing.assert_allclose(sel.sum(-1), 1.0, atol=1e-6)
+    live = np.asarray(d) >= REPLICA_THRESHOLD                      # (K,N)
+    for kk in range(k):
+        if live[kk].any():
+            hosts = sel[kk].argmax(-1)
+            assert live[kk][hosts].all()
