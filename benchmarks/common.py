@@ -30,6 +30,28 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3):
     return result, dt * 1e6
 
 
+def timed_compile_sweep(thunk, n_runs: int):
+    """Time a jit-compiled Monte-Carlo sweep, isolating compilation.
+
+    Calls the zero-arg ``thunk`` twice: the first call pays compilation
+    plus one full sweep, the second is steady state; subtracting isolates
+    the one-time compile. Returns ``(outs, us_per_run, compile_us)``.
+    """
+    import jax
+
+    t0 = time.perf_counter()
+    outs = thunk()
+    jax.block_until_ready(outs)
+    first_call_us = (time.perf_counter() - t0) * 1e6
+
+    t0 = time.perf_counter()
+    outs = thunk()
+    jax.block_until_ready(outs)
+    us_per_run = (time.perf_counter() - t0) * 1e6 / n_runs
+    compile_us = max(first_call_us - n_runs * us_per_run, 0.0)
+    return outs, us_per_run, compile_us
+
+
 def emit(name: str, us_per_call: float, derived: str):
     """The run.py output contract: ``name,us_per_call,derived`` CSV."""
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -18,18 +18,26 @@ run the controller's recovery path — backlog re-injection, survivor
 re-replication, emergency WAN billing — and the bench reports the recovery
 bill plus *recovery-time-to-SLO*: how many slots after the loss the fleet
 backlog needs to drain back under 1.5x its pre-loss level.
+
+``--sweep`` maps the slow-timescale analogue of GMSA's V trade-off: the
+adaptive arm swept over ``epoch_slots`` (re-decision period W) x
+``move_budget`` (per-epoch correction step alpha), reporting the
+cost-vs-churn frontier — time-averaged total cost against WAN GB moved
+(placement churn). Small W / large alpha chases the drift aggressively
+(low dispatch cost, high churn); large W / small alpha barely moves
+(static-like). Each W is its own compilation (the epoch structure is
+static), so the sweep reports per-cell compile time too.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import N_RUNS, emit
+from benchmarks.common import N_RUNS, emit, timed_compile_sweep
 from repro.configs.facebook_4dc import PaperSimConfig, make_sim_builder
 from repro.core.baselines import static_placement_rule
 from repro.core.gmsa import dispatch_fn
@@ -50,6 +58,10 @@ FAULT_SITE = 1            # ForestCity — where the drifting ingest piles up
 FAULT_SLOT = 144          # noon of the 24 h horizon
 SLO_FACTOR = 1.5          # "recovered" = backlog back under 1.5x pre-loss
 
+SWEEP_EPOCH_SLOTS = (24, 48, 96, 144)   # divisors of the 288-slot horizon
+SWEEP_MOVE_BUDGETS = (0.25, 0.5, 1.0)
+SWEEP_RUNS = 64           # per-cell Monte-Carlo runs (12 compiled cells)
+
 
 def recovery_time_to_slo(backlog_avg: np.ndarray, t_die: int) -> int:
     """Slots after ``t_die`` until the run-mean backlog re-enters the SLO.
@@ -66,21 +78,72 @@ def recovery_time_to_slo(backlog_avg: np.ndarray, t_die: int) -> int:
 
 
 def _timed_sweep(build, up, down, pol, rule, key, n_runs, pcfg, **kw):
-    t0 = time.perf_counter()
-    outs = simulate_placed_many(build, up, down, pol, rule, key, n_runs,
-                                pcfg, **kw)
-    jax.block_until_ready(outs.cost)
-    first_call_us = (time.perf_counter() - t0) * 1e6
+    return timed_compile_sweep(
+        lambda: simulate_placed_many(build, up, down, pol, rule, key,
+                                     n_runs, pcfg, **kw),
+        n_runs,
+    )
 
-    t0 = time.perf_counter()
-    outs = simulate_placed_many(build, up, down, pol, rule, key, n_runs,
-                                pcfg, **kw)
-    jax.block_until_ready(outs.cost)
-    us_per_run = (time.perf_counter() - t0) * 1e6 / n_runs
-    # The first call pays compilation plus one full sweep; subtracting
-    # the steady-state sweep isolates the one-time compilation.
-    compile_us = max(first_call_us - n_runs * us_per_run, 0.0)
-    return outs, us_per_run, compile_us
+
+def sweep(cfg, build, up, down):
+    """The epoch-length x move-budget frontier (cost vs. churn).
+
+    Every cell faces the *same* exogenous drift: one ingest walk drawn at
+    the finest epoch granularity, aggregated per slow-loop window (mean
+    mix over the window), with the per-epoch mixing fraction and dataset
+    growth compounded so a W-slot epoch applies exactly the cumulative
+    drift of W/W0 fine epochs. Only the controller's re-decision period
+    and step size vary — otherwise large-W cells would see ~(W/W0)x less
+    drift and the frontier would reward slow loops for the wrong reason.
+    """
+    pol = dispatch_fn(cfg.v)
+    key = jax.random.key(0)
+    n_runs = min(N_RUNS, SWEEP_RUNS)
+    rule = make_adaptive_rule(up, temp=2.0)
+    w0 = min(SWEEP_EPOCH_SLOTS)
+    fine = ingest_drift_trace(
+        jax.random.key(7), cfg.t_slots // w0, cfg.k_types, cfg.n_sites,
+        bias=jnp.array([0.05, 0.8, 0.05, 0.10]), bias_strength=0.5,
+    )                                                     # (E0, K, N)
+    frontier = []
+    for w in SWEEP_EPOCH_SLOTS:
+        n_epochs = cfg.t_slots // w
+        stride = w // w0
+        ingest = fine.reshape(n_epochs, stride, cfg.k_types, cfg.n_sites).mean(1)
+        ingest = ingest / jnp.sum(ingest, axis=-1, keepdims=True)
+        # Compound the headline scenario's per-48-slot rates to this W.
+        growth = 1.0 - (1.0 - INGEST_FRACTION) ** (w / EPOCH_SLOTS)
+        sizes = dataset_growth_trace(
+            n_epochs, cfg.k_types, 100.0,
+            (1.0 + GROWTH_PER_EPOCH) ** (w / EPOCH_SLOTS) - 1.0,
+        )
+        for mb in SWEEP_MOVE_BUDGETS:
+            pcfg = PlacementConfig(
+                epoch_slots=w, move_budget=mb, growth=growth,
+                capacity_gb=(220.0, 220.0, 220.0, 220.0),
+                manager_share=cfg.manager_share, map_share=cfg.map_share,
+            )
+            outs, us_per_run, compile_us = _timed_sweep(
+                build, up, down, pol, rule, key, n_runs, pcfg,
+                ingest=ingest, sizes_gb=sizes,
+            )
+            s = summarize_placed(outs)
+            frontier.append((w, mb, s))
+            emit(
+                f"placement_sweep_w{w}_b{mb}", us_per_run,
+                f"total_cost={s['time_avg_total_cost']:.1f};"
+                f"wan_gb={s['total_wan_gb']:.0f};"
+                f"wan_cost={s['time_avg_wan_cost']:.2f};"
+                f"backlog={s['time_avg_backlog']:.2f};"
+                f"compile_us={compile_us:.0f}",
+            )
+    best = min(frontier, key=lambda c: c[2]["time_avg_total_cost"])
+    emit(
+        "placement_sweep_best", 0.0,
+        f"epoch_slots={best[0]};move_budget={best[1]};"
+        f"total_cost={best[2]['time_avg_total_cost']:.1f};"
+        f"wan_gb={best[2]['total_wan_gb']:.0f}",
+    )
 
 
 def main(argv=None):
@@ -90,12 +153,21 @@ def main(argv=None):
         help="mid-trace site-loss chaos scenario (adaptive-with-recovery "
              "vs static under the same outage)",
     )
+    parser.add_argument(
+        "--sweep", action="store_true",
+        help="epoch_slots x move_budget sweep: the cost-vs-churn frontier "
+             "(the slow-timescale analogue of GMSA's V sweep)",
+    )
     args, _ = parser.parse_known_args(argv)
 
     cfg = PaperSimConfig()
     _, build = make_sim_builder(cfg)
     root = jax.random.key(cfg.trace_seed)
     up, down = bandwidth_draw(jax.random.split(root, 6)[2], cfg.n_sites)
+
+    if args.sweep:
+        sweep(cfg, build, up, down)
+        return
 
     n_epochs = cfg.t_slots // EPOCH_SLOTS
     # Ingest drifts toward ForestCity — the expensive site (traces.price).

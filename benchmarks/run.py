@@ -19,6 +19,7 @@ def main() -> None:
         ("fig6", "benchmarks.fig6"),
         ("sim_bench", "benchmarks.sim_bench"),
         ("placement_bench", "benchmarks.placement_bench"),
+        ("jobs_bench", "benchmarks.jobs_bench"),
         ("kernel_bench", "benchmarks.kernel_bench"),
         ("roofline", "benchmarks.roofline"),
     ]:

@@ -1,0 +1,74 @@
+"""repro.jobs — stage-structured geo-analytics jobs.
+
+The paper's GMSA treats a job as one indivisible unit: a single dispatch
+fraction per slot, the (K, N, N) ratio tensor silently absorbing where the
+map/reduce/aggregation work lands, and the intermediate-data transfer it
+implies never modeled or billed. This subsystem makes jobs first-class
+multi-stage chains and schedules them *jointly* with GMSA:
+
+* :mod:`repro.jobs.dag`       — padded, jit-safe stage-DAG representation
+  (per-stage compute intensity, shuffle volume/selectivity, chain
+  precedence via monotone masks).
+* :mod:`repro.jobs.scheduler` — per-slot joint decision rules: map pinned
+  to ``data_dist`` locality, downstream stages chosen by the GMSA
+  drift-plus-penalty score extended with the intermediate-data WAN energy
+  term (priced via :class:`repro.placement.wan.WanModel`); plus the
+  ``stage_oblivious`` adapter exposing every base policy to the staged
+  engine.
+* :mod:`repro.jobs.engine`    — ``simulate_staged``: a jit scan engine
+  with per-stage queues generalizing Eq. 1, reusing the simulator's
+  ``slot_step``/``energy_tables``, vmappable for Monte-Carlo, and
+  composable with ``simulate_placed`` (time-varying ``r``/``data_dist``)
+  so slow-loop re-placement reshapes map locality.
+
+Shuffle-volume/selectivity traces live in :mod:`repro.traces.stages`; the
+multi-stage Facebook-4DC scenario in
+:mod:`repro.configs.facebook_4dc_stages`; the stage-aware vs.
+stage-oblivious comparison in ``benchmarks/jobs_bench.py``.
+"""
+
+from repro.jobs.dag import (
+    StageDag,
+    chain_dag,
+    map_reduce_dag,
+    pad_chains,
+    shuffle_volumes_from_selectivity,
+    single_stage_dag,
+    validate_dag,
+)
+from repro.jobs.engine import (
+    StagedOutputs,
+    simulate_staged,
+    simulate_staged_many,
+    summarize_staged,
+)
+from repro.jobs.scheduler import (
+    flow_step,
+    make_staged_policy,
+    shuffle_price,
+    stage_oblivious,
+    stage_service_rates,
+    staged_dispatch_fn,
+    staged_stage_scores,
+)
+
+__all__ = [
+    "StageDag",
+    "chain_dag",
+    "map_reduce_dag",
+    "pad_chains",
+    "shuffle_volumes_from_selectivity",
+    "single_stage_dag",
+    "validate_dag",
+    "StagedOutputs",
+    "simulate_staged",
+    "simulate_staged_many",
+    "summarize_staged",
+    "flow_step",
+    "make_staged_policy",
+    "shuffle_price",
+    "stage_oblivious",
+    "stage_service_rates",
+    "staged_dispatch_fn",
+    "staged_stage_scores",
+]

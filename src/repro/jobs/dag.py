@@ -1,0 +1,215 @@
+"""Padded, jit-safe stage-DAG representation of geo-analytics jobs.
+
+The paper's fine-grained paradigm (Sec. III) decomposes an analytics job
+into map tasks at the data sites, an intermediate-data transfer over the
+WAN, and aggregation at the global manager — a *chain of stages* with data
+shrinking (or occasionally growing) at each hop. The base simulator
+collapses this structure into a single dispatch fraction per job; the
+:mod:`repro.jobs` subsystem makes it first-class.
+
+A :class:`StageDag` describes the per-type stage chain in three padded
+(K, S) arrays — S is the maximum stage count over the K job types, shorter
+chains are padded with identity stages and masked out:
+
+* ``compute[k, s]``   — compute intensity of stage s (fraction of the
+  job's total IT work P^k; active rows typically sum to 1). A stage with
+  intensity c consumes service capacity at rate c — its effective service
+  rate is ``mu / c`` — and bills ``c * e[k, i]`` per job at its chosen
+  site.
+* ``shuffle_gb[k, s]`` — GB of input data a type-k job must feed *into*
+  stage s. For s = 0 this is the map stage's remote-input pull (zero under
+  the paper's data-local-map premise); for s > 0 it is the intermediate
+  (shuffle) volume produced by stage s-1, i.e. the quantity GMSA routes
+  implicitly but never bills.
+* ``stage_mask[k, s]`` — 1.0 while the chain is active, then 0.0. Masks
+  are monotone (a prefix of ones): precedence is the linear chain
+  s -> s+1, the level-ordered frontier every stage-structured DAG
+  scheduler executes.
+
+Everything is a plain array NamedTuple — hashable-free, traceable,
+vmappable — so a dag rides through ``jax.jit`` closures untouched.
+
+Volumes are conveniently derived from *selectivities* (output/input volume
+ratio per stage, the standard analytics measure):
+``shuffle_gb[k, s] = input_gb[k] * prod_{u<s} selectivity[k, u]`` — see
+:func:`shuffle_volumes_from_selectivity` and the trace generators in
+:mod:`repro.traces.stages`.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+from jax import Array
+
+
+class StageDag(NamedTuple):
+    """Padded stage-chain description of K job types (shapes (K, S)).
+
+    Attributes:
+        compute: per-stage compute intensity (fraction of P^k; padded 1.0).
+        shuffle_gb: GB entering each stage per job (padded 0.0).
+        stage_mask: {0, 1} activity mask, monotone non-increasing per row.
+    """
+
+    compute: Array
+    shuffle_gb: Array
+    stage_mask: Array
+
+    @property
+    def k_types(self) -> int:
+        return self.compute.shape[0]
+
+    @property
+    def s_max(self) -> int:
+        return self.compute.shape[1]
+
+    @property
+    def n_stages(self) -> Array:
+        """(K,) number of active stages per job type."""
+        return jnp.sum(self.stage_mask, axis=1).astype(jnp.int32)
+
+
+def chain_dag(
+    compute: Array | Sequence,
+    shuffle_gb: Array | Sequence,
+    stage_mask: Array | Sequence | None = None,
+) -> StageDag:
+    """Build a :class:`StageDag` from (K, S) arrays, normalizing dtypes.
+
+    ``stage_mask`` defaults to all-active. Padded (masked-out) entries are
+    forced to the identity values — compute 1.0 (so the padded stage's
+    effective service rate stays finite) and shuffle 0.0 — regardless of
+    what the caller put there, keeping the engine's arithmetic on dead
+    stages exact no-ops.
+    """
+    compute = jnp.asarray(compute, jnp.float32)
+    shuffle_gb = jnp.asarray(shuffle_gb, jnp.float32)
+    if stage_mask is None:
+        stage_mask = jnp.ones_like(compute)
+    stage_mask = jnp.asarray(stage_mask, jnp.float32)
+    compute = jnp.where(stage_mask > 0.5, compute, 1.0)
+    shuffle_gb = jnp.where(stage_mask > 0.5, shuffle_gb, 0.0)
+    return StageDag(compute, shuffle_gb, stage_mask)
+
+
+def single_stage_dag(k_types: int) -> StageDag:
+    """The trivial one-stage chain: the base paper's monolithic job.
+
+    compute 1, no shuffle — :func:`repro.jobs.engine.simulate_staged` over
+    this dag reproduces :func:`repro.core.simulator.simulate` bit for bit
+    (the equivalence the test suite pins down).
+    """
+    ones = jnp.ones((k_types, 1), jnp.float32)
+    return StageDag(ones, jnp.zeros((k_types, 1), jnp.float32), ones)
+
+
+def map_reduce_dag(
+    k_types: int,
+    intermediate_gb: float | Array = 5.0,
+    map_share: float = 0.6,
+    input_gb: float | Array = 0.0,
+) -> StageDag:
+    """The canonical two-stage map -> reduce/aggregate chain.
+
+    Args:
+        k_types: number of job types (the scalars broadcast).
+        intermediate_gb: per-job map-output volume shuffled into the
+            reduce stage.
+        map_share: compute fraction of the map stage (reduce gets the rest).
+        input_gb: optional remote-input pull billed to the map stage
+            (0 under the paper's data-local-map premise).
+    """
+    compute = jnp.broadcast_to(
+        jnp.asarray([map_share, 1.0 - map_share], jnp.float32), (k_types, 2)
+    )
+    shuffle = jnp.stack(
+        [
+            jnp.broadcast_to(jnp.asarray(input_gb, jnp.float32), (k_types,)),
+            jnp.broadcast_to(jnp.asarray(intermediate_gb, jnp.float32), (k_types,)),
+        ],
+        axis=1,
+    )
+    return chain_dag(compute, shuffle)
+
+
+def pad_chains(
+    computes: Sequence[Sequence[float]],
+    shuffles: Sequence[Sequence[float]],
+) -> StageDag:
+    """Assemble per-type chains of *different* depths into one padded dag.
+
+    Args:
+        computes: K lists of per-stage compute intensities.
+        shuffles: K lists of per-stage input volumes (same lengths).
+
+    Returns:
+        A (K, S_max) :class:`StageDag` with monotone masks.
+    """
+    if len(computes) != len(shuffles):
+        raise ValueError("computes and shuffles must list the same K types")
+    s_max = max(len(c) for c in computes)
+    comp, shuf, mask = [], [], []
+    for c, g in zip(computes, shuffles):
+        if len(c) != len(g):
+            raise ValueError(
+                f"stage count mismatch: {len(c)} intensities vs "
+                f"{len(g)} volumes"
+            )
+        pad = s_max - len(c)
+        comp.append(list(c) + [1.0] * pad)
+        shuf.append(list(g) + [0.0] * pad)
+        mask.append([1.0] * len(c) + [0.0] * pad)
+    return chain_dag(jnp.asarray(comp), jnp.asarray(shuf), jnp.asarray(mask))
+
+
+def shuffle_volumes_from_selectivity(
+    input_gb: Array | float,
+    selectivity: Array,
+    bill_input: bool = False,
+) -> Array:
+    """(K, S) per-stage input volumes from per-stage selectivities.
+
+    Stage s's input volume is the job input shrunk by every upstream
+    stage: ``input_gb * prod_{u<s} selectivity[:, u]``. Stage 0's entry is
+    0 unless ``bill_input`` (the data-local-map premise — map input never
+    crosses the WAN).
+
+    Args:
+        input_gb: (K,) or scalar per-job input dataset size.
+        selectivity: (K, S) per-stage output/input volume ratios.
+        bill_input: charge the full input to stage 0 (remote-map model).
+    """
+    selectivity = jnp.asarray(selectivity, jnp.float32)
+    k_types = selectivity.shape[0]
+    base = jnp.broadcast_to(jnp.asarray(input_gb, jnp.float32), (k_types,))
+    # Volume entering stage s = input * prod of selectivities before s.
+    shifted = jnp.concatenate(
+        [jnp.ones((k_types, 1), jnp.float32), selectivity[:, :-1]], axis=1
+    )
+    vols = base[:, None] * jnp.cumprod(shifted, axis=1)            # (K, S)
+    if not bill_input:
+        vols = vols.at[:, 0].set(0.0)
+    return vols
+
+
+def validate_dag(dag: StageDag) -> None:
+    """Eager sanity checks (not jit-safe; call at construction time)."""
+    k, s = dag.compute.shape
+    if dag.shuffle_gb.shape != (k, s) or dag.stage_mask.shape != (k, s):
+        raise ValueError(
+            f"inconsistent dag shapes: compute {dag.compute.shape}, "
+            f"shuffle {dag.shuffle_gb.shape}, mask {dag.stage_mask.shape}"
+        )
+    mask = jnp.asarray(dag.stage_mask)
+    if not bool(jnp.all((mask == 0.0) | (mask == 1.0))):
+        raise ValueError("stage_mask must be {0, 1}")
+    if not bool(jnp.all(mask[:, 0] == 1.0)):
+        raise ValueError("every job type needs at least one active stage")
+    if not bool(jnp.all(mask[:, :-1] >= mask[:, 1:])):
+        raise ValueError("stage_mask rows must be monotone (a prefix of 1s)")
+    if not bool(jnp.all(jnp.where(mask > 0.5, dag.compute, 1.0) > 0.0)):
+        raise ValueError("active stages need strictly positive compute")
+    if not bool(jnp.all(dag.shuffle_gb >= 0.0)):
+        raise ValueError("shuffle volumes must be non-negative")

@@ -1,0 +1,261 @@
+"""``simulate_staged`` — trace-driven engine for stage-structured jobs.
+
+Generalizes :func:`repro.core.simulator.simulate` from one queue per
+(DC, type) to one per (DC, type, stage): per slot, each stage's inflow is
+dispatched by the policy's (N, K, S) decision, Eq. 1 advances every stage
+queue (via the shared :func:`repro.core.simulator.slot_step` body — the
+equivalence with ``simulate`` is structural), completions flow down the
+chain within the slot (a tandem of queues), and the intermediate bytes
+each hop ships across the WAN are billed through
+:func:`repro.placement.wan.transfer_plan` / ``transfer_cost`` — the
+surplus/deficit coupling, so a stage whose destination mix equals its
+source mix (a data-local map, a co-located reduce) moves nothing.
+
+The per-slot semantics, stage by stage (s = 0..S-1, a static unrolled
+loop):
+
+    in^{k,s}   = f^{k,s} * F^{k,s}          F^{k,0} = A^k(t), else the
+                                            upstream completions
+    Q^{k,s}    + Eq. 1 under (in, mu / c^{k,s})
+    done^{k,s} = min(Q + in, mu/c)          flows to stage s+1 (or out)
+    WAN bill   = transfer_cost(transfer_plan(src^{k,s}, f^{k,s},
+                               F^{k,s} * G^{k,s}))
+
+With a single-stage dag (compute 1, shuffle 0) every extra term is an
+exact float identity and ``simulate_staged`` reproduces ``simulate``'s
+cost/backlog/dispatch bit for bit on every policy — the test suite pins
+this down. ``r`` and ``data_dist`` may carry a leading time axis exactly
+as in ``simulate``, which is how the subsystem composes with
+:func:`repro.placement.controller.simulate_placed`: run the slow loop,
+repeat its per-epoch ``placements``/``r_trace`` per slot, and feed them
+here — re-placement reshapes the map stage's locality (and the whole
+chain's shuffle sources) over the horizon.
+
+The whole run is one ``jax.lax.scan`` (jit); Monte-Carlo replication is a
+``jax.vmap`` over PRNG keys (``simulate_staged_many``), sharing one
+compilation — the same perf structure as the base simulator.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.simulator import (
+    PolicyFn,
+    SimInputs,
+    _energy_tables,
+    slot_step,
+)
+from repro.jobs.dag import StageDag
+from repro.jobs.scheduler import flow_step, stage_oblivious, stage_service_rates
+from repro.placement.wan import WanModel, transfer_cost, transfer_plan
+
+
+class StagedOutputs(NamedTuple):
+    """Per-slot traces of one staged run (leading runs axis under vmap)."""
+
+    cost: Array           # (T,) per-slot stage-compute energy cost
+    energy: Array         # (T,) PUE-weighted compute energy (unpriced)
+    backlog_total: Array  # (T,) sum over all (DC, type, stage) backlogs
+    backlog_avg: Array    # (T,) mean backlog per (DC, type, stage)
+    q_final: Array        # (N, K, S)
+    f_trace: Array        # (T, N, K, S) per-stage dispatch decisions
+    wan_cost: Array       # (T,) $ billed for intermediate-data movement
+    wan_energy: Array     # (T,) WAN energy (job-energy equivalents)
+    wan_gb: Array         # (T,) intermediate GB crossing the WAN
+    completed: Array      # (T, K) jobs finishing their last stage per slot
+
+
+def _chain_sum(terms: list) -> Array:
+    """Left-fold sum that is the identity for one term (bit-exactness)."""
+    acc = terms[0]
+    for t in terms[1:]:
+        acc = acc + t
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("policy",))
+def simulate_staged(
+    inputs: SimInputs,
+    dag: StageDag,
+    wan: WanModel,
+    policy: PolicyFn,
+    key: Array,
+    scalar: float | Array = 0.0,
+) -> StagedOutputs:
+    """Run one stage-structured trace-driven simulation under ``policy``.
+
+    Args:
+        inputs: the usual trace bundle; ``r``/``data_dist`` may be static
+            or time-varying exactly as in ``simulate``.
+        dag: the (K, S) stage chain.
+        wan: WAN model pricing the inter-stage shuffle bytes.
+        policy: a staged policy (attribute ``staged = True``, signature
+            ``(key, q(N,K,S), arrivals, mu, e, (data_dist, wpue), scalar)
+            -> f(N,K,S)``) or any base simulator policy, which is wrapped
+            by :func:`repro.jobs.scheduler.stage_oblivious` automatically.
+        key: PRNG key (consumed exactly as ``simulate`` does, on both the
+            precomputed and the carried-key policy paths).
+        scalar: traced control parameter forwarded to the policy (GMSA's V).
+    """
+    t_slots, k_types = inputs.arrivals.shape
+    n = inputs.mu.shape[1]
+    s_max = dag.s_max
+    if dag.compute.shape[0] != k_types:
+        raise ValueError(
+            f"dag is for K={dag.compute.shape[0]} types, inputs carry "
+            f"K={k_types}"
+        )
+    q0 = jnp.zeros((n, k_types, s_max), jnp.float32)
+    e_cost_all, e_raw_all = _energy_tables(inputs)                 # (T, K, N)
+    wpue_all = inputs.omega * inputs.pue                           # (T, N)
+    scalar = jnp.asarray(scalar, jnp.float32)
+
+    pol = policy if getattr(policy, "staged", False) else stage_oblivious(policy)
+    dd_varying = inputs.data_dist.ndim == 3                        # (T, K, N)
+
+    f_all = None
+    if getattr(pol, "state_independent", False):
+        keys = jax.random.split(key, t_slots)
+        if dd_varying:
+            f_all = jax.vmap(
+                lambda kk, a, m, e, d, w: pol(kk, q0, a, m, e, (d, w), scalar)
+            )(keys, inputs.arrivals, inputs.mu, e_cost_all,
+              inputs.data_dist, wpue_all)
+        else:
+            f_all = jax.vmap(
+                lambda kk, a, m, e, w: pol(
+                    kk, q0, a, m, e, (inputs.data_dist, w), scalar
+                )
+            )(keys, inputs.arrivals, inputs.mu, e_cost_all, wpue_all)
+
+    def slot(carry, xs):
+        q, key = carry
+        if dd_varying:
+            xs, dd_t = xs[:-1], xs[-1]
+        else:
+            dd_t = inputs.data_dist
+        arrivals, mu, e_cost, e_raw, omega_t, pue_t = xs[:6]
+        rest = xs[6:]
+        if f_all is None:
+            key, sub = jax.random.split(key)
+            wpue_t = omega_t * pue_t
+            f = pol(sub, q, arrivals, mu, e_cost, (dd_t, wpue_t), scalar)
+        else:
+            (f,) = rest
+
+        mu_stages = stage_service_rates(mu, dag)                   # (N, K, S)
+        total_in = arrivals                                        # (K,)
+        src = dd_t                                                 # (K, N)
+        costs, energies, btots, bavgs = [], [], [], []
+        wan_cs, wan_es, wan_gbs = [], [], []
+        q_cols = []
+        completed = jnp.zeros((k_types,), jnp.float32)
+        for s in range(s_max):
+            f_s = f[:, :, s]                                       # (N, K)
+            mu_s = mu_stages[:, :, s]
+            ec_s = e_cost * dag.compute[:, s, None]                # (K, N)
+            er_s = e_raw * dag.compute[:, s, None]
+            # Intermediate bytes: only the source/destination mismatch
+            # crosses the WAN (transfer_plan's surplus/deficit coupling).
+            vol = total_in * dag.shuffle_gb[:, s]                  # (K,)
+            plan = transfer_plan(src, f_s.T, vol)                  # (K, N, N)
+            wc, we, wgb = transfer_cost(plan, wan, omega_t, pue_t)
+            q_next_s, (c_s, en_s, bt_s, ba_s, _) = slot_step(
+                q[:, :, s], f_s, total_in, mu_s, ec_s, er_s
+            )
+            total_done, src = flow_step(q[:, :, s], f_s, total_in, mu_s)
+            nxt = (
+                dag.stage_mask[:, s + 1]
+                if s + 1 < s_max
+                else jnp.zeros((k_types,), jnp.float32)
+            )
+            completed = completed + total_done * (dag.stage_mask[:, s] - nxt)
+            total_in = total_done * nxt
+            q_cols.append(q_next_s)
+            costs.append(c_s)
+            energies.append(en_s)
+            btots.append(bt_s)
+            bavgs.append(ba_s)
+            wan_cs.append(wc)
+            wan_es.append(we)
+            wan_gbs.append(wgb)
+
+        q_next = jnp.stack(q_cols, axis=-1)                        # (N, K, S)
+        out = (
+            _chain_sum(costs),
+            _chain_sum(energies),
+            _chain_sum(btots),
+            _chain_sum(bavgs) / s_max,
+            f,
+            _chain_sum(wan_cs),
+            _chain_sum(wan_es),
+            _chain_sum(wan_gbs),
+            completed,
+        )
+        return (q_next, key), out
+
+    xs = (inputs.arrivals, inputs.mu, e_cost_all, e_raw_all,
+          inputs.omega, inputs.pue)
+    if f_all is not None:
+        xs = xs + (f_all,)
+    if dd_varying:
+        xs = xs + (inputs.data_dist,)
+    (q_final, _), (cost, energy, btot, bavg, f_trace, wan_c, wan_e,
+                   wan_gb, completed) = jax.lax.scan(slot, (q0, key), xs)
+    return StagedOutputs(
+        cost=cost, energy=energy, backlog_total=btot, backlog_avg=bavg,
+        q_final=q_final, f_trace=f_trace,
+        wan_cost=wan_c, wan_energy=wan_e, wan_gb=wan_gb,
+        completed=completed,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "build_inputs", "n_runs"))
+def simulate_staged_many(
+    build_inputs: Callable[[Array], SimInputs],
+    dag: StageDag,
+    wan: WanModel,
+    policy: PolicyFn,
+    key: Array,
+    n_runs: int,
+    scalar: float | Array = 0.0,
+) -> StagedOutputs:
+    """Monte-Carlo replication of :func:`simulate_staged` (vmap over keys).
+
+    Mirrors ``simulate_many``: fresh stochastic traces + policy randomness
+    per run, deterministic traces (prices, PUE, the dag, the WAN model)
+    shared. One compilation serves every run.
+    """
+    keys = jax.random.split(key, n_runs)
+
+    def one(run_key):
+        k_build, k_sim = jax.random.split(run_key)
+        return simulate_staged(
+            build_inputs(k_build), dag, wan, policy, k_sim, scalar
+        )
+
+    return jax.vmap(one)(keys)
+
+
+def summarize_staged(outs: StagedOutputs) -> dict:
+    """Time-averaged scalars incl. the shuffle WAN bill (any runs axis)."""
+    compute = jnp.mean(outs.cost)
+    wan = jnp.mean(outs.wan_cost)
+    return {
+        "time_avg_compute_cost": float(compute),
+        "time_avg_wan_cost": float(wan),
+        "time_avg_total_cost": float(compute + wan),
+        "time_avg_energy": float(jnp.mean(outs.energy)),
+        "time_avg_backlog": float(jnp.mean(outs.backlog_avg)),
+        "total_wan_gb": float(jnp.mean(jnp.sum(outs.wan_gb, axis=-1))),
+        "jobs_completed": float(jnp.mean(jnp.sum(outs.completed, axis=(-2, -1)))),
+        "final_backlog_total": float(
+            jnp.mean(outs.q_final.sum(axis=(-3, -2, -1)))
+        ),
+    }

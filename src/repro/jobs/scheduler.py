@@ -1,0 +1,217 @@
+"""Joint manager selection & stage placement (per-slot decision rules).
+
+Extends GMSA's LP-vertex trick (:mod:`repro.core.gmsa`) from one decision
+per job type to one decision per *stage*: the map stage is pinned to
+``data_dist`` locality (the GDA premise — map tasks run where the data
+lives, nothing crosses the WAN), and every downstream stage's site is
+chosen by a drift-plus-penalty score that now includes the
+intermediate-data WAN energy term the base algorithm routes implicitly
+but never bills:
+
+    score[k, s, i] = F^{k,s} * ( Q_i^{k,s} - mu_i^{k,s}
+                                 + V * [ c^{k,s} e_i^k  +  G^{k,s} w_i^{k,s} ] )
+
+with ``F`` the flow entering the stage this slot, ``c`` the stage compute
+intensity, ``G`` the stage's shuffle volume, and
+``w_i = sum_{j != i} src_j * price[j, i]`` the expected $-per-GB of
+pulling the upstream output mix ``src`` to site i, priced exactly as
+:func:`repro.placement.wan.transfer_cost` bills it (half the energy at
+each endpoint, local pulls free). For one-hot decisions the score's WAN
+term equals the engine's ``transfer_plan`` bill to the byte, so the argmin
+vertex remains the exact LP optimum of the per-stage relaxation.
+
+Because downstream shuffle sources depend on upstream completions, the
+policy replicates the engine's within-slot flow propagation
+(:func:`flow_step` — the single definition shared with
+:mod:`repro.jobs.engine`) stage by stage: decide f^{k,0}, advance the
+flow, decide f^{k,1} against the realized source mix, and so on. All
+closed-form, jit-safe, vmappable over Monte-Carlo runs.
+
+``stage_oblivious`` adapts any base simulator policy (GMSA, DATA, RANDOM,
+JSQ, GREEDY-COST) to the staged engine: one manager choice per type from
+the aggregate backlog, applied to every stage — the current, shuffle-blind
+dispatch the benchmarks compare against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+from jax.nn import one_hot
+
+from repro.core.gmsa import drift_plus_penalty_scores
+from repro.jobs.dag import StageDag
+from repro.placement.wan import WanModel, link_price_matrix
+
+_EPS = 1e-12
+
+
+def shuffle_price(wan: WanModel, wpue: Array) -> Array:
+    """(N, N) $-per-GB link prices, matching ``transfer_cost`` semantics.
+
+    price[j, i] — shipping one GB j -> i draws ``energy_per_gb`` half at
+    each endpoint, at that endpoint's current price*PUE; the diagonal is
+    zero (local hand-off is free). Derived from the shared
+    :func:`repro.placement.wan.link_price_matrix`, so the score's WAN
+    term and ``transfer_cost``'s bill cannot drift apart.
+    """
+    return link_price_matrix(wpue) * wan.energy_per_gb
+
+
+def stage_service_rates(mu: Array, dag: StageDag) -> Array:
+    """(N, K, S) effective per-stage service rates.
+
+    A stage with compute intensity c occupies a server c job-units per
+    completion, so the base (N, K) service-rate trace stretches to
+    ``mu / c`` per stage. Padded stages carry intensity 1.0 (exact
+    identity — the single-stage dag reproduces ``mu`` bit for bit).
+    """
+    return mu[:, :, None] / dag.compute[None, :, :]
+
+
+def flow_step(
+    q_s: Array, f_s: Array, total_in: Array, mu_s: Array
+) -> tuple[Array, Array]:
+    """Within-slot flow through one stage: completions and their locations.
+
+    Stage s receives ``f_s * total_in`` on top of backlog ``q_s`` and
+    serves at most ``mu_s`` — completions this slot are
+    ``min(q_s + f_s * total_in, mu_s)`` (the served mass of Eq. 1's max).
+    The single definition shared by the engine's billing loop and the
+    stage-aware policy's lookahead, so the score's source mix is exactly
+    the mix the engine bills.
+
+    Returns:
+        (total_done, src): (K,) completions leaving the stage and their
+        (K, N) site distribution (uniform fallback for zero flow — the
+        downstream volume is zero there, so the choice is billing-inert).
+    """
+    n = q_s.shape[0]
+    done = jnp.minimum(q_s + f_s * total_in[None, :], mu_s)        # (N, K)
+    total_done = jnp.sum(done, axis=0)                             # (K,)
+    src = jnp.where(
+        total_done[:, None] > _EPS,
+        done.T / jnp.maximum(total_done[:, None], _EPS),
+        1.0 / n,
+    )                                                              # (K, N)
+    return total_done, src
+
+
+def staged_stage_scores(
+    q_s: Array,
+    total_in: Array,
+    mu_s: Array,
+    e: Array,
+    compute_s: Array,
+    shuffle_gb_s: Array,
+    src: Array,
+    price: Array,
+    v: float | Array,
+) -> Array:
+    """(K, N) drift-plus-penalty scores for one stage's site choice.
+
+    The base GMSA score (:func:`repro.core.gmsa.drift_plus_penalty_scores`)
+    with the per-job penalty extended by the stage's WAN pull term:
+    ``e_stage[k, i] = compute_s[k] * e[k, i]
+    + shuffle_gb_s[k] * sum_j src[k, j] * price[j, i]``.
+    """
+    pull = src @ price                                             # (K, N)
+    e_stage = compute_s[:, None] * e + shuffle_gb_s[:, None] * pull
+    return drift_plus_penalty_scores(q_s, total_in, mu_s, e_stage, v)
+
+
+def make_staged_policy(dag: StageDag, wan: WanModel, pin_map: bool = True):
+    """Stage-aware GMSA: per-stage LP-vertex dispatch with WAN pricing.
+
+    Returns a policy with the staged signature
+    ``(key, q, arrivals, mu, e, aux, scalar) -> f`` where ``q``/``f`` are
+    (N, K, S) and ``aux = (data_dist, wpue)`` — V rides in as the traced
+    ``scalar`` exactly like :func:`repro.core.gmsa.gmsa_policy`, so a
+    V-sweep reuses one compilation.
+
+    Args:
+        dag: the stage chain (closed over; arrays, so the closure stays
+            jit-transparent).
+        wan: WAN model pricing the shuffle pulls.
+        pin_map: pin stage 0 to ``data_dist`` (data-local map). When
+            False, stage 0 is score-chosen like any other stage — only
+            meaningful when the dag bills a stage-0 input pull.
+    """
+
+    def policy(key, q, arrivals, mu, e, aux, scalar):
+        del key
+        data_dist, wpue = aux
+        n = q.shape[0]
+        price = shuffle_price(wan, wpue)                           # (N, N)
+        mu_stages = stage_service_rates(mu, dag)                   # (N, K, S)
+        total_in = arrivals                                        # (K,)
+        src = data_dist                                            # (K, N)
+        cols = []
+        for s in range(dag.s_max):
+            mu_s = mu_stages[:, :, s]
+            if s == 0 and pin_map:
+                f_s = data_dist.T                                  # (N, K)
+            else:
+                scores = staged_stage_scores(
+                    q[:, :, s], total_in, mu_s, e,
+                    dag.compute[:, s], dag.shuffle_gb[:, s],
+                    src, price, scalar,
+                )                                                  # (K, N)
+                f_s = one_hot(
+                    jnp.argmin(scores, axis=1), n, dtype=q.dtype
+                ).T                                                # (N, K)
+            cols.append(f_s)
+            total_done, src = flow_step(q[:, :, s], f_s, total_in, mu_s)
+            if s + 1 < dag.s_max:
+                total_in = total_done * dag.stage_mask[:, s + 1]
+        return jnp.stack(cols, axis=-1)                            # (N, K, S)
+
+    policy.staged = True
+    return policy
+
+
+def staged_dispatch_fn(dag: StageDag, wan: WanModel, v: float,
+                       pin_map: bool = True):
+    """Closure adapter binding a static V (one compilation per V)."""
+    base = make_staged_policy(dag, wan, pin_map=pin_map)
+
+    def policy(key, q, arrivals, mu, e, aux, scalar):
+        del scalar
+        return base(key, q, arrivals, mu, e, aux, v)
+
+    policy.staged = True
+    return policy
+
+
+def stage_oblivious(policy, pin_map: bool = False):
+    """Adapt a base simulator policy to the staged engine, shuffle-blind.
+
+    The base policy sees the aggregate backlog ``sum_s Q`` and the plain
+    per-job cost table — exactly what it sees in ``simulate`` — and its
+    (N, K) decision applies to *every* stage: the job follows its manager,
+    no per-stage queues, no WAN term. This is the "current" dispatch the
+    jobs benchmarks compare stage-aware scheduling against; with a
+    single-stage dag it reproduces ``simulate`` bit for bit.
+
+    Args:
+        policy: any base policy ``(key, q(N,K), arrivals, mu, e, aux,
+            scalar) -> f(N,K)``.
+        pin_map: override stage 0 with data-local map placement (used when
+            benchmarking against stage-aware policies under the same
+            data-local-map premise; keep False for exact base semantics).
+    """
+
+    def staged(key, q, arrivals, mu, e, aux, scalar):
+        data_dist, _ = aux
+        q_total = jnp.sum(q, axis=-1)                              # (N, K)
+        f_base = policy(key, q_total, arrivals, mu, e, data_dist, scalar)
+        f = jnp.broadcast_to(f_base[:, :, None], q.shape)
+        if pin_map:
+            f = jnp.concatenate(
+                [data_dist.T[:, :, None], f[:, :, 1:]], axis=-1
+            )
+        return f
+
+    staged.staged = True
+    staged.state_independent = getattr(policy, "state_independent", False)
+    return staged

@@ -32,15 +32,18 @@ from repro.placement.controller import (
 from repro.placement.replica import (
     capacity_project,
     effective_replicas,
+    expected_read_cost,
     hosting_scores,
     make_adaptive_rule,
     replica_read_assignment,
+    replication_premium,
     sync_cost,
     target_placement,
 )
 from repro.placement.wan import (
     WanModel,
     evacuation_plan,
+    link_price_matrix,
     transfer_cost,
     transfer_latency,
     transfer_plan,
@@ -56,13 +59,16 @@ __all__ = [
     "summarize_placed",
     "capacity_project",
     "effective_replicas",
+    "expected_read_cost",
     "hosting_scores",
     "make_adaptive_rule",
     "replica_read_assignment",
+    "replication_premium",
     "sync_cost",
     "target_placement",
     "WanModel",
     "evacuation_plan",
+    "link_price_matrix",
     "transfer_cost",
     "transfer_latency",
     "transfer_plan",

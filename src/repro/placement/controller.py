@@ -54,6 +54,7 @@ from repro.core.simulator import (
     slot_step,
 )
 from repro.placement.replica import sync_cost as replica_sync_cost
+from repro.traces.datasets import io_slowdown_from_bandwidth
 from repro.placement.wan import (
     DEFAULT_ENERGY_PER_GB,
     evacuation_plan,
@@ -98,6 +99,20 @@ class PlacementConfig:
             first must absorb as sync updates per epoch (the replication
             premium of :func:`repro.placement.replica.sync_cost`, charged
             every epoch against the layout in force).
+        io_coupling: thread the *evolving* placement into the per-slot
+            service rates (latency-aware replica reads): each epoch's mu
+            is scaled by the current layout's I/O slowdown
+            (:func:`repro.traces.datasets.io_slowdown_from_bandwidth`)
+            relative to the epoch-0 layout the mu trace was calibrated
+            against — re-placement buys throughput, not just energy
+            price. The slow rule observes the drifted layout's scale;
+            the fast loop runs under the chosen layout's scale (epoch
+            granularity — recovery re-placements inside an epoch keep the
+            epoch's scale). Off by default: the no-coupling path is
+            untouched.
+        io_compute_seconds / io_job_gb: the slowdown model's per-job
+            compute time and intermediate pull volume (defaults match
+            ``io_slowdown_from_bandwidth``).
         size / manager_share / map_share: Iridium rebuild parameters.
             Defaults equal ``build_task_allocation``'s, so default-built
             ``SimInputs.r`` and the per-epoch rebuilds agree; when the
@@ -113,6 +128,9 @@ class PlacementConfig:
     energy_per_gb: float = DEFAULT_ENERGY_PER_GB
     growth: float = 0.0
     update_fraction: float = 0.01
+    io_coupling: bool = False
+    io_compute_seconds: float = 300.0
+    io_job_gb: float = 5.0
     size: float = 1.0
     manager_share: float = 0.3
     map_share: float = 0.6
@@ -156,6 +174,8 @@ class PlacedOutputs(NamedTuple):
     sync_cost: Array       # (E,) $ replication sync premium per epoch
     recovery_cost: Array   # (T,) $ emergency WAN burst on site-loss edges
     recovery_gb: Array     # (T,) GB evacuated/re-replicated on those edges
+    mu_scale: Array        # (E, N) I/O service-rate scale per epoch (ones
+                           # unless cfg.io_coupling)
 
 
 @functools.partial(jax.jit, static_argnames=("policy", "rule", "cfg"))
@@ -254,6 +274,12 @@ def simulate_placed(
     q0 = jnp.zeros((n, k_types), jnp.float32)
     d0 = jnp.asarray(inputs.data_dist, jnp.float32)
     r0 = inputs.r
+    if cfg.io_coupling:
+        # The mu trace is calibrated against the epoch-0 layout; the
+        # coupling rescales it by the current layout's I/O slowdown.
+        slow0 = io_slowdown_from_bandwidth(
+            up, down, d0, cfg.io_compute_seconds, cfg.io_job_gb
+        )
 
     def epoch(carry, xs):
         q, key, d = carry
@@ -290,7 +316,15 @@ def simulate_placed(
         else:
             d_drift = d
         wpue_e = om_e * pu_e                                          # (W, N)
-        mu_bar = jnp.mean(mu_e, axis=0)
+        if cfg.io_coupling:
+            # The rule observes service under the *drifted* layout (its
+            # decision input); the realized scale below follows its choice.
+            scale_obs = io_slowdown_from_bandwidth(
+                up, down, d_drift, cfg.io_compute_seconds, cfg.io_job_gb
+            ) / slow0
+            mu_bar = jnp.mean(mu_e, axis=0) * scale_obs[:, None]
+        else:
+            mu_bar = jnp.mean(mu_e, axis=0)
         if faulty:
             mu_bar = mu_bar * alive_b[:, None]   # dead sites serve nothing
         obs = SlowObs(
@@ -316,6 +350,13 @@ def simulate_placed(
         sync_c = replica_sync_cost(
             d_new, size_e, wan, obs.wpue_bar, cfg.update_fraction
         )
+        if cfg.io_coupling:
+            scale_e = io_slowdown_from_bandwidth(
+                up, down, d_new, cfg.io_compute_seconds, cfg.io_job_gb
+            ) / slow0                                                 # (N,)
+            mu_e = mu_e * scale_e[None, :, None]
+        else:
+            scale_e = jnp.ones((n,), jnp.float32)
         r_e = jnp.where(is_first, r0, rebuild(d_new))                 # (K, N, N)
         if faulty:
             r_m = r_e * alive_b[None, None, :]
@@ -407,7 +448,7 @@ def simulate_placed(
             (q, key), slot_outs = jax.lax.scan(slot, (q, key), slot_xs)
             d_carry = d_new
         epoch_out = slot_outs + (d_new, r_e, wan_c, wan_e, wan_gb, wan_lat,
-                                 sync_c)
+                                 sync_c, scale_e)
         return (q, key, d_carry), epoch_out
 
     xs = (arr_ep, mu_ep, om_ep, pu_ep, sizes_gb,
@@ -420,9 +461,10 @@ def simulate_placed(
     (q_final, _, _), outs = jax.lax.scan(epoch, (q0, key, d0), xs)
     if faulty:
         (cost, energy, btot, bavg, f_trace, rec_cost, rec_gb,
-         d_tr, r_tr, wc, we, wgb, wlat, sc) = outs
+         d_tr, r_tr, wc, we, wgb, wlat, sc, msc) = outs
     else:
-        cost, energy, btot, bavg, f_trace, d_tr, r_tr, wc, we, wgb, wlat, sc = outs
+        (cost, energy, btot, bavg, f_trace,
+         d_tr, r_tr, wc, we, wgb, wlat, sc, msc) = outs
         rec_cost = jnp.zeros((n_epochs, w), jnp.float32)
         rec_gb = jnp.zeros((n_epochs, w), jnp.float32)
     flat = lambda x: x.reshape((t_slots,) + x.shape[2:])
@@ -434,6 +476,7 @@ def simulate_placed(
         wan_cost=wc, wan_energy=we, wan_gb=wgb, wan_latency_s=wlat,
         sync_cost=sc,
         recovery_cost=flat(rec_cost), recovery_gb=flat(rec_gb),
+        mu_scale=msc,
     )
 
 
@@ -490,6 +533,7 @@ def summarize_placed(outs: PlacedOutputs) -> dict:
         "time_avg_energy": float(jnp.mean(outs.energy)),
         "time_avg_backlog": float(jnp.mean(outs.backlog_avg)),
         "total_wan_gb": float(jnp.mean(jnp.sum(outs.wan_gb, axis=-1))),
+        "mean_mu_scale": float(jnp.mean(outs.mu_scale)),
         "total_recovery_gb": float(jnp.mean(jnp.sum(outs.recovery_gb, axis=-1))),
         "max_move_latency_s": float(jnp.max(outs.wan_latency_s)),
         "final_backlog_total": float(jnp.mean(outs.q_final.sum(axis=(-2, -1)))),

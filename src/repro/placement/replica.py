@@ -15,7 +15,11 @@ Everything is a vectorized closed-form/greedy rule in the style of
   storage-capacity polytope by iterative proportional capping;
 * :func:`replica_read_assignment` — the fast replica-*selection* rule: each
   reader site picks its cheapest live replica (an argmin vertex rule);
-* :func:`effective_replicas` / :func:`sync_cost` — the replication premium.
+* :func:`effective_replicas` / :func:`replication_premium` /
+  :func:`sync_cost` — the replication premium (the rule's objective term
+  and the controller's bill share one definition);
+* :func:`expected_read_cost` — spread's benefit under replica selection
+  (feeds the sync-aware candidate ladder of :func:`make_adaptive_rule`).
 
 All functions are pure jnp with static iteration counts: jit-safe inside the
 controller's epoch scan, vmappable over Monte-Carlo runs.
@@ -27,7 +31,7 @@ import jax.numpy as jnp
 from jax import Array
 from jax.nn import one_hot, softmax
 
-from repro.placement.wan import WanModel
+from repro.placement.wan import WanModel, link_price_matrix
 
 _EPS = 1e-12
 
@@ -152,7 +156,7 @@ def replica_read_assignment(
         (K, N, N) selection s[k, j, i] one-hot over hosts i for each reader j.
     """
     n = wpue.shape[0]
-    price = 0.5 * (wpue[:, None] + wpue[None, :]) * wan.energy_per_gb   # (N, N) i,j
+    price = link_price_matrix(wpue) * wan.energy_per_gb                 # (N, N) i,j
     lat = latency_weight * 8.0 / wan.link_bw                            # (N, N)
     cost = price + lat
     cost = jnp.where(jnp.eye(n, dtype=bool), 0.0, cost)                 # local free
@@ -185,14 +189,55 @@ def sync_cost(
     dataset in updates per epoch, shipped over the WAN at the mean link
     price. Shards below :data:`REPLICA_THRESHOLD` are not materialized
     (same rule as :func:`replica_read_assignment`): they hold no copy and
-    sync nothing, so the softmin's residue at expensive sites is not billed.
+    sync nothing, so the softmin's residue at expensive sites is not
+    billed. The billed quantity is exactly :func:`replication_premium` —
+    the term the sync-aware hosting rule optimizes — priced in GB.
     """
-    live = jnp.where(data_dist >= REPLICA_THRESHOLD, data_dist, 0.0)    # (K, N)
-    total = jnp.sum(live, axis=1, keepdims=True)
-    live = jnp.where(total > _EPS, live / jnp.maximum(total, _EPS), data_dist)
-    extra = jnp.maximum(effective_replicas(live) - 1.0, 0.0)            # (K,)
-    gb = jnp.sum(extra * sizes_gb * update_fraction)
+    gb = jnp.sum(replication_premium(data_dist, update_fraction) * sizes_gb)
     return gb * wan.energy_per_gb * jnp.mean(wpue)
+
+
+def replication_premium(target: Array, update_fraction: float) -> Array:
+    """(K,) per-unit-data sync overhead of a candidate placement.
+
+    ``update_fraction * (effective_replicas - 1)`` over the *materialized*
+    shards (the :data:`REPLICA_THRESHOLD` rule). :func:`sync_cost` prices
+    exactly this quantity, so the rule's objective and the controller's
+    bill agree on what counts as a replica by construction. Units:
+    fraction of the dataset re-shipped per epoch — multiplied by a
+    $-per-unit weight by the caller.
+    """
+    live = jnp.where(target >= REPLICA_THRESHOLD, target, 0.0)
+    total = jnp.sum(live, axis=1, keepdims=True)
+    live = jnp.where(total > _EPS, live / jnp.maximum(total, _EPS), target)
+    return update_fraction * jnp.maximum(effective_replicas(live) - 1.0, 0.0)
+
+
+def expected_read_cost(target: Array, wpue: Array, reader_share: Array) -> Array:
+    """(K,) per-unit-data cost of serving reads from a candidate placement.
+
+    Each reader site pulls from its cheapest *materialized* replica —
+    the exact selection rule of :func:`replica_read_assignment` (local
+    reads free, remote reads at the endpoint-mean price) — weighted by
+    ``reader_share`` (where the reading work actually runs). This is the
+    spread-favoring half of the replication trade-off: more replicas
+    mean cheaper reads, which is what finite placement temperature buys
+    and what the sync premium charges for. Units: $/MWh-equivalents per
+    unit data (the ``energy_per_gb`` scale is the caller's weight).
+
+    Args:
+        target: (K, N) candidate placement (rows on the simplex).
+        wpue: (N,) current omega * PUE.
+        reader_share: (K, N) per-type read weights (rows sum to 1).
+    """
+    price = link_price_matrix(wpue)                               # (i, j)
+    live = target >= REPLICA_THRESHOLD                            # (K, N)
+    cost_kji = jnp.where(live[:, None, :], price.T[None], jnp.inf)
+    best = jnp.min(cost_kji, axis=2)                              # (K, j)
+    # A candidate with no materialized replica cannot serve reads at all;
+    # make it maximally unattractive (finite, so argmin stays valid).
+    best = jnp.where(jnp.isfinite(best), best, jnp.max(wpue))
+    return jnp.sum(reader_share * best, axis=1)
 
 
 def make_adaptive_rule(
@@ -201,12 +246,39 @@ def make_adaptive_rule(
     colo_weight: float = 0.0,
     net_weight: float = 0.0,
     project_iters: int = 32,
+    sync_weight: float = 0.0,
+    update_fraction: float = 0.01,
+    read_fraction: float = 0.05,
 ):
     """Bind scoring weights into the controller's slow-timescale rule.
 
     Returns ``rule(d, obs) -> d_target`` for
     :func:`repro.placement.controller.simulate_placed`; ``obs`` is a
     :class:`repro.placement.controller.SlowObs`.
+
+    With ``sync_weight > 0`` the rule itself trades replication's benefit
+    against its overhead (not just the billing): it evaluates a ladder of
+    spread candidates — softmins from 4x warmer than ``temp`` down to the
+    one-hot LP vertex — under the replica-*selection* cost surrogate
+
+        min over materialized i of score[k, i]       (primary serving)
+        + read_fraction * expected_read_cost(c)      (spread's benefit)
+        + sync_weight * wpue_mean
+          * replication_premium(c, update_fraction)  (spread's cost)
+
+    all in $/MWh-equivalents per unit data, and keeps the per-type argmin
+    before capacity projection. Under replica selection the marginal work
+    is served by the best materialized replica (so serving cost is the
+    primary's score, shared by every candidate that keeps the best site
+    live — NOT the linear ``c . score``, under which the vertex would
+    minimize serving and premium simultaneously and no weight could ever
+    spread); what extra replicas buy is read locality (every reader
+    pulls from its cheapest materialized replica, the
+    :func:`replica_read_assignment` rule), and what they cost is exactly
+    the premium :func:`sync_cost` bills. ``sync_weight`` dials
+    consolidation: 0 preserves the original single-candidate rule
+    exactly; small values keep warm, replica-rich placements; large
+    values collapse to the vertex.
     """
     up = jnp.asarray(up, jnp.float32)
 
@@ -229,9 +301,39 @@ def make_adaptive_rule(
             alive = jnp.asarray(alive, jnp.float32)
             scores = scores + DEAD_SITE_PENALTY * (1.0 - alive)[None, :]
             capacity_gb = jnp.where(alive < 0.5, 0.0, capacity_gb)
-        return target_placement(
-            scores, obs.sizes_gb, capacity_gb,
-            temp=temp, project_iters=project_iters,
+        if sync_weight == 0.0:
+            return target_placement(
+                scores, obs.sizes_gb, capacity_gb,
+                temp=temp, project_iters=project_iters,
+            )
+        # Sync-aware candidate ladder: warmer softmins spread replicas
+        # (cheap reads, costly sync), colder ones consolidate. Chosen per
+        # type under the selection surrogate: primary serving + read
+        # benefit + sync premium, jit-safe.
+        cands = jnp.stack([
+            softmax(-scores / jnp.maximum(t, 1e-6), axis=1)
+            for t in (4.0 * temp, temp, 0.25 * temp, 1e-6)
+        ])                                                              # (C, K, N)
+        live = cands >= REPLICA_THRESHOLD
+        big = jnp.max(jnp.abs(scores)) + 1.0
+        primary = jnp.min(
+            jnp.where(live, scores[None], big), axis=2
+        )                                                               # (C, K)
+        premium = jnp.stack([
+            replication_premium(c, update_fraction) for c in cands
+        ])                                                              # (C, K)
+        read = jnp.stack([
+            expected_read_cost(c, obs.wpue_bar, cap_share) for c in cands
+        ])                                                              # (C, K)
+        wpue_mean = jnp.mean(obs.wpue_bar)
+        total = (primary + read_fraction * read
+                 + sync_weight * wpue_mean * premium)
+        best = jnp.argmin(total, axis=0)                                # (K,)
+        pref = jnp.take_along_axis(
+            cands, best[None, :, None], axis=0
+        )[0]                                                            # (K, N)
+        return capacity_project(
+            pref, obs.sizes_gb, capacity_gb, project_iters
         )
 
     return rule

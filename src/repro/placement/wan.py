@@ -57,6 +57,26 @@ def wan_topology(
     return WanModel(up, down, bw, jnp.asarray(energy_per_gb, jnp.float32))
 
 
+def link_price_matrix(per_site: Array, local_free: bool = True) -> Array:
+    """(N, N) endpoint-mean link weights: 0.5 * (w_i + w_j) for i -> j.
+
+    The single definition of "a byte on link i->j draws its energy half
+    at each endpoint" — shared by :func:`transfer_cost`, replica
+    selection (:mod:`repro.placement.replica`) and the stage scheduler's
+    shuffle pricing (:mod:`repro.jobs.scheduler`), so their $-per-GB
+    semantics cannot drift apart. ``per_site`` is whatever per-site
+    weight is being averaged (omega*PUE for prices, PUE for energy).
+    ``local_free`` zeroes the diagonal (intra-site hand-offs are free) —
+    what every consumer scoring *candidate* destinations wants; plan
+    pricing may keep it, since transfer plans carry zero diagonals.
+    """
+    n = per_site.shape[0]
+    price = 0.5 * (per_site[:, None] + per_site[None, :])
+    if local_free:
+        price = jnp.where(jnp.eye(n, dtype=bool), 0.0, price)
+    return price
+
+
 def transfer_plan(d_old: Array, d_new: Array, sizes_gb: Array) -> Array:
     """(K, N, N) GB moved on each link to morph ``d_old`` into ``d_new``.
 
@@ -135,8 +155,8 @@ def transfer_cost(
         job-equivalents, and total GB crossing the WAN.
     """
     wpue = omega * pue                                           # (N,)
-    link_price = 0.5 * (wpue[:, None] + wpue[None, :])           # (N, N)
-    link_energy = 0.5 * (pue[:, None] + pue[None, :])
+    link_price = link_price_matrix(wpue, local_free=False)       # (N, N)
+    link_energy = link_price_matrix(pue, local_free=False)
     gb_links = jnp.sum(plan_gb, axis=0)                          # (N, N)
     cost = wan.energy_per_gb * jnp.sum(gb_links * link_price)
     energy = wan.energy_per_gb * jnp.sum(gb_links * link_energy)

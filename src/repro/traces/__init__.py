@@ -11,6 +11,9 @@ Control-plane traces (paper Sec. V-A experimental setup):
       the repro.placement two-timescale controller).
     * :mod:`repro.traces.faults`    — seeded site-failure/recovery alive masks
       (the chaos scenario class; feeds the controller's recovery epochs).
+    * :mod:`repro.traces.stages`    — stage-depth / compute-share /
+      selectivity profiles for stage-structured job mixes (feeds the
+      repro.jobs staged scheduling subsystem).
 
 Training-data pipeline (used by repro.train):
     * :mod:`repro.traces.tokens`    — deterministic synthetic token corpus,
@@ -28,6 +31,12 @@ from repro.traces.faults import (
     scheduled_failure_trace,
     site_failure_trace,
 )
+from repro.traces.stages import (
+    selectivity_trace,
+    stage_compute_profile,
+    stage_depth_mask,
+    staged_mix_profile,
+)
 
 __all__ = [
     "poisson_arrivals",
@@ -44,4 +53,8 @@ __all__ = [
     "failure_edges",
     "scheduled_failure_trace",
     "site_failure_trace",
+    "selectivity_trace",
+    "stage_compute_profile",
+    "stage_depth_mask",
+    "staged_mix_profile",
 ]

@@ -1,0 +1,116 @@
+"""Shuffle-volume / selectivity traces for stage-structured jobs.
+
+Production analytics mixes are stage-structured: a map/filter pass over
+the input, one or more shuffle+reduce rounds, a small aggregation at the
+end. Two numbers characterize each stage for the geo control plane:
+
+* **selectivity** — output/input volume ratio. Filter-heavy map stages
+  shrink data 3–30x (selectivity 0.03–0.3); join/expand stages can exceed
+  1. Log-normal across a mix is the standard empirical fit.
+* **compute share** — the fraction of the job's IT work the stage burns.
+
+These generators draw padded (K, S) profiles for the K job types of a
+scenario — depths, compute splits, selectivities — which
+:mod:`repro.jobs.dag` assembles into a :class:`repro.jobs.dag.StageDag`
+(volumes via ``shuffle_volumes_from_selectivity``). All draws are seeded
+and shapes static, so a config can pin its scenario exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+_EPS = 1e-6
+
+
+def stage_depth_mask(
+    key: Array, k_types: int, s_max: int, min_stages: int = 2
+) -> Array:
+    """(K, S) monotone activity masks with uniform depths in [min, S].
+
+    Every row is a prefix of ones — the padded-chain precedence contract
+    of :class:`repro.jobs.dag.StageDag`.
+    """
+    if not 1 <= min_stages <= s_max:
+        raise ValueError(f"need 1 <= min_stages <= {s_max}, got {min_stages}")
+    depths = jax.random.randint(key, (k_types,), min_stages, s_max + 1)
+    return (jnp.arange(s_max)[None, :] < depths[:, None]).astype(jnp.float32)
+
+
+def stage_compute_profile(
+    key: Array,
+    mask: Array,
+    conc: float = 12.0,
+    map_weight: float = 0.8,
+) -> Array:
+    """(K, S) per-stage compute shares (active entries sum to 1 per row).
+
+    Dirichlet over the active stages with a mildly *down-weighted* map
+    stage (``map_weight`` < 1): shuffle-heavy analytics burn most of their
+    cycles in the reduce rounds, and a lean map stage keeps the data-local
+    map placement stable even when a dataset concentrates at a
+    small-capacity site (the map stage's effective service rate is
+    ``mu / share``). Padded stages get the identity share 1.0 (masked out
+    by the dag contract).
+
+    Args:
+        key: PRNG key.
+        mask: (K, S) monotone activity mask.
+        conc: Dirichlet concentration (larger = closer to the prior mix).
+        map_weight: prior weight of stage 0 relative to the others.
+    """
+    k_types, s_max = mask.shape
+    prior = jnp.concatenate(
+        [jnp.full((1,), map_weight), jnp.ones((s_max - 1,))]
+    )                                                              # (S,)
+    gam = jax.random.gamma(key, conc * prior[None, :], (k_types, s_max))
+    gam = gam * mask
+    shares = gam / jnp.maximum(jnp.sum(gam, axis=1, keepdims=True), _EPS)
+    return jnp.where(mask > 0.5, shares, 1.0)
+
+
+def selectivity_trace(
+    key: Array,
+    k_types: int,
+    s_max: int,
+    log10_mean: float = -0.65,
+    log10_std: float = 0.35,
+    clip: tuple[float, float] = (0.02, 1.2),
+) -> Array:
+    """(K, S) per-stage selectivities (output/input ratio), log-normal.
+
+    The default centers stages around ~0.22x shrink with occasional
+    near-1 (shuffle-heavy joins) and deep filters, matching published
+    analytics-trace fits. ``selectivity[k, s]`` is the ratio *out of*
+    stage s, so the volume entering stage s is
+    ``input_gb * prod_{u<s} selectivity[k, u]`` — see
+    :func:`repro.jobs.dag.shuffle_volumes_from_selectivity`.
+    """
+    logs = log10_mean + log10_std * jax.random.normal(key, (k_types, s_max))
+    return jnp.clip(10.0 ** logs, clip[0], clip[1])
+
+
+def staged_mix_profile(
+    key: Array,
+    k_types: int,
+    s_max: int,
+    min_stages: int = 2,
+    conc: float = 12.0,
+    map_weight: float = 0.8,
+    log10_mean: float = -0.65,
+    log10_std: float = 0.35,
+) -> tuple[Array, Array, Array]:
+    """Draw one scenario's full (mask, compute, selectivity) bundle.
+
+    Convenience wrapper splitting one key over the three generators;
+    returns padded (K, S) arrays ready for
+    :func:`repro.jobs.dag.chain_dag` +
+    :func:`repro.jobs.dag.shuffle_volumes_from_selectivity`.
+    """
+    k_depth, k_comp, k_sel = jax.random.split(key, 3)
+    mask = stage_depth_mask(k_depth, k_types, s_max, min_stages)
+    compute = stage_compute_profile(k_comp, mask, conc, map_weight)
+    selectivity = selectivity_trace(k_sel, k_types, s_max, log10_mean, log10_std)
+    return mask, compute, selectivity
