@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import json
 import os
 import pathlib
 import time
@@ -9,9 +10,19 @@ import time
 ART = pathlib.Path(__file__).resolve().parent / "artifacts"
 ART.mkdir(exist_ok=True)
 
+#: Machine-readable perf trajectory (EXPERIMENTS.md §Perf): every bench run
+#: appends one entry here so future PRs can diff per-bench ``us_per_call``
+#: against history. Lives at the repo root (committed; CI also uploads it
+#: as an artifact).
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sim.json"
+
 #: Paper methodology: 1000 Monte-Carlo runs. Override for quick iterations:
 #: REPRO_BENCH_RUNS=100 python -m benchmarks.run
 N_RUNS = int(os.environ.get("REPRO_BENCH_RUNS", "1000"))
+
+#: Records accumulated by :func:`emit` in this process, flushed to
+#: :data:`BENCH_JSON` by :func:`write_bench_json`.
+_RECORDS: list[dict] = []
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 3):
@@ -30,11 +41,14 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3):
     return result, dt * 1e6
 
 
-def timed_compile_sweep(thunk, n_runs: int):
+def timed_compile_sweep(thunk, n_runs: int, iters: int = 4):
     """Time a jit-compiled Monte-Carlo sweep, isolating compilation.
 
-    Calls the zero-arg ``thunk`` twice: the first call pays compilation
-    plus one full sweep, the second is steady state; subtracting isolates
+    The first call pays compilation plus one full sweep; steady state is
+    the MINIMUM of ``iters`` further calls — the timeit-style best-of
+    estimator: on shared/noisy CPUs every timing above the minimum is
+    scheduler interference, not the program (a single call, which this
+    harness used to take, is hostage to that noise). Subtracting isolates
     the one-time compile. Returns ``(outs, us_per_run, compile_us)``.
     """
     import jax
@@ -44,14 +58,64 @@ def timed_compile_sweep(thunk, n_runs: int):
     jax.block_until_ready(outs)
     first_call_us = (time.perf_counter() - t0) * 1e6
 
-    t0 = time.perf_counter()
-    outs = thunk()
-    jax.block_until_ready(outs)
-    us_per_run = (time.perf_counter() - t0) * 1e6 / n_runs
+    steady = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        outs = thunk()
+        jax.block_until_ready(outs)
+        steady.append((time.perf_counter() - t0) * 1e6)
+    us_per_run = min(steady) / n_runs
     compile_us = max(first_call_us - n_runs * us_per_run, 0.0)
     return outs, us_per_run, compile_us
 
 
+def _parse_derived(derived: str) -> dict:
+    """Best-effort ``k=v;k=v`` -> dict (values floated when possible)."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v.rstrip("%x"))
+        except ValueError:
+            out[k] = v
+    return out
+
+
 def emit(name: str, us_per_call: float, derived: str):
-    """The run.py output contract: ``name,us_per_call,derived`` CSV."""
+    """The run.py output contract: ``name,us_per_call,derived`` CSV.
+
+    Also records the row for :func:`write_bench_json`.
+    """
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    _RECORDS.append({
+        "name": name,
+        "us_per_call": round(us_per_call, 1),
+        "derived": _parse_derived(derived),
+    })
+
+
+def write_bench_json(label: str | None = None):
+    """Append this process's emitted records to :data:`BENCH_JSON`.
+
+    Called by ``benchmarks.run`` after the full suite and by each bench
+    module's ``__main__`` guard when run standalone (the CI smoke step),
+    so the perf trajectory accrues either way. No-op when nothing was
+    emitted.
+    """
+    if not _RECORDS:
+        return
+    history = []
+    if BENCH_JSON.exists():
+        try:
+            history = json.loads(BENCH_JSON.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append({
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "label": label,
+        "n_runs_env": N_RUNS,
+        "benches": list(_RECORDS),
+    })
+    BENCH_JSON.write_text(json.dumps(history, indent=1) + "\n")

@@ -5,6 +5,13 @@
 (b) time-average backlog vs V — grows with V (the O(1/V)/O(V) trade-off);
     our calibration crosses the baselines' 24h averages at V ≈ O(100)
     (paper: ≈10; noted in EXPERIMENTS.md §Calibration).
+
+Since §Perf v6 the whole V-grid runs through
+:func:`repro.core.sweep.sweep_grid` — ONE compilation + ONE launch for all
+|V| x n_runs simulations (V was already a traced scalar; now the grid axis
+is vmapped on top of the Monte-Carlo vmap). The bench still times the old
+per-cell launch loop once and reports the compile-time and steady-state
+deltas (``fig6_grid_vs_percell``).
 """
 
 from __future__ import annotations
@@ -15,11 +22,12 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import ART, N_RUNS, emit
+from benchmarks.common import ART, N_RUNS, emit, timed_compile_sweep
 from repro.configs.facebook_4dc import PaperSimConfig, make_sim_builder
 from repro.core.baselines import data_dispatch, greedy_cost_dispatch, random_dispatch
 from repro.core.gmsa import gmsa_policy
 from repro.core.simulator import simulate_many
+from repro.core.sweep import sweep_grid
 
 #: Paper grid (0.001…100) + one extra decade to exhibit the backlog
 #: crossing of Fig. 6(b) under our calibration (EXPERIMENTS.md §Calibration).
@@ -31,25 +39,47 @@ def run(n_runs: int = N_RUNS) -> dict:
     _, build = make_sim_builder(cfg)
     key = jax.random.key(43)
 
-    t0 = time.perf_counter()
-    rows = {}
-    for v in V_GRID:
-        # V is a *traced* scalar (repro.core.gmsa.gmsa_policy): the whole
-        # sweep shares one compiled simulation (§Perf wall-clock track).
-        outs = simulate_many(build, gmsa_policy, key, n_runs, scalar=v)
-        rows[v] = {
-            "cost": float(outs.cost.mean()),
-            "backlog": float(outs.backlog_avg.mean()),
+    # One-launch V-grid (sweep axis on top of the Monte-Carlo vmap).
+    outs, grid_us_per_run, grid_compile_us = timed_compile_sweep(
+        lambda: sweep_grid(build, gmsa_policy, key, n_runs, V_GRID),
+        n_runs * len(V_GRID),
+    )
+    rows = {
+        v: {
+            "cost": float(outs.cost[i].mean()),
+            "backlog": float(outs.backlog_avg[i].mean()),
         }
+        for i, v in enumerate(V_GRID)
+    }
+
+    # The pre-sweep_grid path (one launch per V, shared compilation via
+    # the traced scalar) — measured with the SAME best-of estimator as the
+    # grid, for an unbiased migration delta report.
+    def percell_pass():
+        last = None
+        for v in V_GRID:
+            last = simulate_many(build, gmsa_policy, key, n_runs, scalar=v)
+        return last
+
+    _, percell_us_per_run, percell_compile_us = timed_compile_sweep(
+        percell_pass, n_runs * len(V_GRID)
+    )
+
+    t1 = time.perf_counter()
     base = {}
     for name, pol in [("DATA", data_dispatch), ("RANDOM", random_dispatch),
                       ("GREEDY", greedy_cost_dispatch)]:
-        outs = simulate_many(build, pol, key, n_runs)
+        o = simulate_many(build, pol, key, n_runs)
         base[name] = {
-            "cost": float(outs.cost.mean()),
-            "backlog": float(outs.backlog_avg.mean()),
+            "cost": float(o.cost.mean()),
+            "backlog": float(o.backlog_avg.mean()),
         }
-    total_us = (time.perf_counter() - t0) * 1e6
+    baselines_us = (time.perf_counter() - t1) * 1e6
+    # The figure's own cost (grid compile + one steady grid + baselines) —
+    # excludes the delta-report harness above, keeping this number
+    # comparable across BENCH_sim.json entries.
+    total_us = (grid_compile_us + n_runs * len(V_GRID) * grid_us_per_run
+                + baselines_us)
 
     costs = [rows[v]["cost"] for v in V_GRID]
     backlogs = [rows[v]["backlog"] for v in V_GRID]
@@ -66,6 +96,12 @@ def run(n_runs: int = N_RUNS) -> dict:
         "v_grid": list(V_GRID),
         "gmsa": rows,
         "baselines": base,
+        "sweep_grid": {
+            "grid_us_per_run": grid_us_per_run,
+            "grid_compile_us": grid_compile_us,
+            "percell_us_per_run": percell_us_per_run,
+            "percell_compile_us": percell_compile_us,
+        },
         "checks": {
             "cost_monotone_nonincreasing": bool(
                 all(costs[i + 1] <= costs[i] * 1.01 for i in range(len(costs) - 1))
@@ -88,6 +124,7 @@ def run(n_runs: int = N_RUNS) -> dict:
 def main():
     out = run()
     c = out["checks"]
+    s = out["sweep_grid"]
     emit("fig6a_cost_vs_V", out["total_us"] / (len(V_GRID) + 3),
          f"baseline={c['baseline_cost']:.0f};best={c['best_gmsa_cost']:.0f};"
          f"reduction={100*c['reduction_at_v100']:.1f}%")
@@ -95,6 +132,11 @@ def main():
          f"monotone_cost={c['cost_monotone_nonincreasing']};"
          f"monotone_backlog={c['backlog_monotone_nondecreasing']};"
          f"crosses_baselines_at_V={c['backlog_crossing_v']}")
+    emit("fig6_grid_vs_percell", s["grid_us_per_run"],
+         f"percell_us_per_run={s['percell_us_per_run']:.1f};"
+         f"steady_speedup={s['percell_us_per_run']/max(s['grid_us_per_run'],1e-9):.2f}x;"
+         f"grid_compile_us={s['grid_compile_us']:.0f};"
+         f"percell_compile_us={s['percell_compile_us']:.0f}")
     assert c["cost_monotone_nonincreasing"], "Fig6a: cost must fall with V"
     assert c["backlog_monotone_nondecreasing"], "Fig6b: backlog must rise with V"
     assert 0.2 <= c["reduction_at_v100"] <= 0.45, (
@@ -104,3 +146,5 @@ def main():
 
 if __name__ == "__main__":
     main()
+    from benchmarks.common import write_bench_json
+    write_bench_json(label="fig6")

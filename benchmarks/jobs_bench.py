@@ -103,3 +103,5 @@ def main(argv=None):
 
 if __name__ == "__main__":
     main()
+    from benchmarks.common import write_bench_json
+    write_bench_json(label="jobs_bench")

@@ -1,4 +1,4 @@
-"""Kernel-layer microbenchmarks.
+"""Kernel-layer microbenchmarks + the fleet-scale end-to-end run.
 
 Wall-clock on this container measures the pure-JAX (XLA:CPU) paths — the
 TPU Pallas kernels are the *target* (validated in interpret mode, timed
@@ -6,6 +6,11 @@ meaningfully only on hardware). Reported here:
 
   * gmsa dispatch (jnp path) at fleet scales (N pods × K classes) — the
     per-slot control-plane latency budget;
+  * the N = 256 ``configs.fleet_256`` scenario END-TO-END: a full GMSA
+    simulation through ``gmsa_dispatch(..., impl="kernel")`` (interpret
+    mode off-TPU — a correctness/viability gate, not a speed number on
+    CPU) against the same run on the hoisted-einsum reference engine,
+    with dispatch-agreement and cost-parity checks;
   * ssd chunked scan (jnp path) at mamba2-2.7b layer geometry;
   * per-shape interpret-mode *correctness* spot checks for both kernels
     (already swept in tests; repeated here so the bench run self-validates).
@@ -18,11 +23,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timed
+from repro.configs.fleet_256 import FleetConfig, make_fleet_builder
+from repro.core.gmsa import gmsa_policy, make_kernel_policy
+from repro.core.simulator import simulate
 from repro.kernels.gmsa_score.ref import gmsa_score_ref
 from repro.kernels.gmsa_score.ops import gmsa_score
 from repro.kernels.ssd_scan.ops import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
 from repro.models.ssm import ssd_chunked
+
+#: End-to-end fleet horizon: long enough that queues develop (the argmin
+#: is exercised against live backlogs), short enough that the Python-free
+#: interpret-mode kernel path compiles and runs in CI time.
+FLEET_E2E_SLOTS = 48
 
 
 def bench_gmsa_dispatch():
@@ -51,6 +64,48 @@ def bench_gmsa_dispatch():
             assert np.array_equal(np.asarray(b_k), np.asarray(b_ref))
 
 
+def bench_fleet_e2e():
+    """N = 256 fleet GMSA, end-to-end through the kernel dispatch path."""
+    cfg = FleetConfig(t_slots=FLEET_E2E_SLOTS)
+    template, _ = make_fleet_builder(cfg)
+    key = jax.random.key(0)
+
+    # Reference engine: hoisted-einsum cost tables + pure-XLA argmin.
+    o_ref, us_ref = timed(
+        lambda: simulate(template, gmsa_policy, key, cfg.v)
+    )
+    emit(
+        f"fleet256_e2e_ref_T{cfg.t_slots}", us_ref,
+        f"n={cfg.n_sites};k={cfg.k_types};"
+        f"us_per_slot={us_ref/cfg.t_slots:.1f};"
+        f"avg_cost={float(o_ref.cost.mean()):.0f};"
+        f"final_backlog={float(o_ref.backlog_total[-1]):.1f}",
+    )
+
+    # Kernel engine: the fused Pallas score+argmin per slot (interpret
+    # mode off-TPU — this row gates that the fleet scenario COMPLETES
+    # through gmsa_dispatch(impl="kernel"); compiled-TPU timing is the
+    # hardware target).
+    pol_k = make_kernel_policy(template.r, template.p_it)
+    o_k, us_k = timed(
+        lambda: simulate(template, pol_k, key, cfg.v), iters=1
+    )
+    agree = float((o_k.f_trace == o_ref.f_trace).mean())
+    cost_rel = abs(float(o_k.cost.mean()) - float(o_ref.cost.mean())) / max(
+        float(o_ref.cost.mean()), 1e-9
+    )
+    interp = jax.default_backend() != "tpu"
+    emit(
+        f"fleet256_e2e_kernel_T{cfg.t_slots}", us_k,
+        f"interpret={interp};dispatch_agreement={agree:.4f};"
+        f"cost_rel_err={cost_rel:.2e}",
+    )
+    assert agree > 0.999, (
+        f"kernel dispatch must match the reference engine (got {agree})"
+    )
+    assert cost_rel < 1e-3, f"fleet e2e cost diverged ({cost_rel})"
+
+
 def bench_ssd():
     b, s, h, p, n = 1, 2048, 80, 64, 128   # mamba2-2.7b layer geometry
     key = jax.random.key(1)
@@ -73,8 +128,11 @@ def bench_ssd():
 
 def main():
     bench_gmsa_dispatch()
+    bench_fleet_e2e()
     bench_ssd()
 
 
 if __name__ == "__main__":
     main()
+    from benchmarks.common import write_bench_json
+    write_bench_json(label="kernel_bench")

@@ -41,6 +41,7 @@ from benchmarks.common import N_RUNS, emit, timed_compile_sweep
 from repro.configs.facebook_4dc import PaperSimConfig, make_sim_builder
 from repro.core.baselines import static_placement_rule
 from repro.core.gmsa import dispatch_fn
+from repro.core.sweep import sweep_placed_budgets
 from repro.placement import (
     PlacementConfig,
     make_adaptive_rule,
@@ -95,6 +96,13 @@ def sweep(cfg, build, up, down):
     drift of W/W0 fine epochs. Only the controller's re-decision period
     and step size vary — otherwise large-W cells would see ~(W/W0)x less
     drift and the frontier would reward slow loops for the wrong reason.
+
+    §Perf v6: each W (one compilation — the epoch structure is static) now
+    runs its WHOLE move-budget column as ONE launch through
+    :func:`repro.core.sweep.sweep_placed_budgets` (the controller's
+    ``move_budget`` became traced data). The old per-cell launch path is
+    timed once, at the first W, for the migration delta
+    (``placement_sweep_grid_vs_percell``).
     """
     pol = dispatch_fn(cfg.v)
     key = jax.random.key(0)
@@ -106,6 +114,7 @@ def sweep(cfg, build, up, down):
         bias=jnp.array([0.05, 0.8, 0.05, 0.10]), bias_strength=0.5,
     )                                                     # (E0, K, N)
     frontier = []
+    percell_report = None
     for w in SWEEP_EPOCH_SLOTS:
         n_epochs = cfg.t_slots // w
         stride = w // w0
@@ -117,26 +126,67 @@ def sweep(cfg, build, up, down):
             n_epochs, cfg.k_types, 100.0,
             (1.0 + GROWTH_PER_EPOCH) ** (w / EPOCH_SLOTS) - 1.0,
         )
-        for mb in SWEEP_MOVE_BUDGETS:
-            pcfg = PlacementConfig(
-                epoch_slots=w, move_budget=mb, growth=growth,
-                capacity_gb=(220.0, 220.0, 220.0, 220.0),
-                manager_share=cfg.manager_share, map_share=cfg.map_share,
-            )
-            outs, us_per_run, compile_us = _timed_sweep(
+        pcfg = PlacementConfig(
+            epoch_slots=w, growth=growth,
+            capacity_gb=(220.0, 220.0, 220.0, 220.0),
+            manager_share=cfg.manager_share, map_share=cfg.map_share,
+        )
+        # The whole move-budget column in one compilation + one launch.
+        col, col_us_per_run, col_compile_us = timed_compile_sweep(
+            lambda: sweep_placed_budgets(
                 build, up, down, pol, rule, key, n_runs, pcfg,
-                ingest=ingest, sizes_gb=sizes,
-            )
-            s = summarize_placed(outs)
+                SWEEP_MOVE_BUDGETS, ingest=ingest, sizes_gb=sizes,
+            ),
+            n_runs * len(SWEEP_MOVE_BUDGETS),
+        )
+        for i, mb in enumerate(SWEEP_MOVE_BUDGETS):
+            s = summarize_placed(jax.tree_util.tree_map(lambda x: x[i], col))
             frontier.append((w, mb, s))
             emit(
-                f"placement_sweep_w{w}_b{mb}", us_per_run,
+                f"placement_sweep_w{w}_b{mb}", col_us_per_run,
                 f"total_cost={s['time_avg_total_cost']:.1f};"
                 f"wan_gb={s['total_wan_gb']:.0f};"
                 f"wan_cost={s['time_avg_wan_cost']:.2f};"
                 f"backlog={s['time_avg_backlog']:.2f};"
-                f"compile_us={compile_us:.0f}",
+                f"grid_compile_us={col_compile_us:.0f}",
             )
+        if percell_report is None:
+            # Old per-cell path (one launch + one compile per move budget,
+            # since the static cfg.move_budget re-specializes the jit) —
+            # measured with the SAME best-of estimator as the grid column,
+            # for an unbiased delta report.
+            cfgs = [
+                PlacementConfig(
+                    epoch_slots=w, move_budget=mb, growth=growth,
+                    capacity_gb=(220.0, 220.0, 220.0, 220.0),
+                    manager_share=cfg.manager_share, map_share=cfg.map_share,
+                )
+                for mb in SWEEP_MOVE_BUDGETS
+            ]
+
+            def percell_pass():
+                last = None
+                for pc in cfgs:
+                    last = simulate_placed_many(
+                        build, up, down, pol, rule, key, n_runs, pc,
+                        ingest=ingest, sizes_gb=sizes,
+                    )
+                return last
+
+            _, percell_us_per_run, percell_compile_us = timed_compile_sweep(
+                percell_pass, n_runs * len(SWEEP_MOVE_BUDGETS)
+            )
+            percell_report = (
+                col_us_per_run, col_compile_us,
+                percell_us_per_run, percell_compile_us,
+            )
+    g_us, g_c, p_us, p_c = percell_report
+    emit(
+        "placement_sweep_grid_vs_percell", g_us,
+        f"percell_us_per_run={p_us:.1f};"
+        f"steady_speedup={p_us/max(g_us,1e-9):.2f}x;"
+        f"grid_compile_us={g_c:.0f};percell_compile_us={p_c:.0f}",
+    )
     best = min(frontier, key=lambda c: c[2]["time_avg_total_cost"])
     emit(
         "placement_sweep_best", 0.0,
@@ -236,3 +286,5 @@ def main(argv=None):
 
 if __name__ == "__main__":
     main()
+    from benchmarks.common import write_bench_json
+    write_bench_json(label="placement_bench")

@@ -10,6 +10,8 @@ from __future__ import annotations
 import sys
 import traceback
 
+from benchmarks.common import write_bench_json
+
 
 def main() -> None:
     failures = []
@@ -30,6 +32,9 @@ def main() -> None:
             failures.append(name)
             print(f"{name},-1,FAILED", flush=True)
             traceback.print_exc()
+    # Machine-readable perf trajectory (EXPERIMENTS.md §Perf): append this
+    # run's rows to BENCH_sim.json at the repo root.
+    write_bench_json(label="full" if not failures else "partial")
     if failures:
         sys.exit(f"benchmark failures: {failures}")
 

@@ -82,3 +82,5 @@ def main():
 
 if __name__ == "__main__":
     main()
+    from benchmarks.common import write_bench_json
+    write_bench_json(label="sim_bench")

@@ -23,3 +23,12 @@ Layout:
 """
 
 __version__ = "1.0.0"
+
+# Perf (EXPERIMENTS.md §Perf v6): use jax's unrolled threefry lowering on
+# CPU — bitwise-identical random streams, ~4x faster bit generation (the
+# Monte-Carlo trace builds are threefry-bound). No-op off-CPU / on failure;
+# opt out with REPRO_ROLLED_THREEFRY=1.
+from repro.core.prngfast import enable_unrolled_threefry_cpu as _unroll_threefry
+
+_unroll_threefry()
+del _unroll_threefry

@@ -1,0 +1,160 @@
+"""Synthetic fleet-scale scenario: N = 256 heterogeneous sites (§Perf v6).
+
+The paper's evaluation stops at four DCs; the ROADMAP's north star is a
+control plane that serves *fleet* scale — hundreds of sites, heterogeneous
+power markets, PUE climates and access links — where the (K, N, N) ratio
+tensor is what the :mod:`repro.kernels.gmsa_score` Pallas kernel was tiled
+for (N_T = J_T = 128: at N = 256 the grid is 2x2 tiles per type-block).
+This module synthesizes that scenario:
+
+* **sites**: 256 :class:`repro.traces.price.SiteSpec`s drawn from seeded
+  distributions spanning the real spread — base prices log-uniform
+  ~$9–45/MWh (hydro-rich grids to expensive coastal markets), UTC offsets
+  over the whole day (follow-the-sun arbitrage exists by construction),
+  PUE 1.04–1.25, diurnal amplitudes proportional to base price;
+* **traces**: the same calibrated synthesizers the paper setup uses
+  (:func:`repro.traces.price.price_trace`, :func:`repro.traces.pue.pue_trace`)
+  — they are site-count agnostic;
+* **bandwidths**: fleet backbone, 1–40 Gb/s per access link;
+* **datasets**: K = 8 job classes, skewed Dirichlet layouts (data lives
+  where it was ingested), Iridium ratios from the same
+  :func:`repro.core.iridium.build_task_allocation` as the 4-DC setup;
+* **arrivals/service**: the inverse-CDF Poisson tables of the paper
+  config, scaled to fleet traffic (``jobs_per_slot`` per class) with
+  capacity spread over 256 sites.
+
+``make_fleet_builder`` returns the same ``(template, build_inputs)``
+contract as :func:`repro.configs.facebook_4dc.make_sim_builder`, so every
+engine and bench composes unchanged. The canonical end-to-end consumer is
+``benchmarks/kernel_bench.py``: a full GMSA run through
+``gmsa_dispatch(..., impl="kernel")`` (interpret mode on CPU/CI).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.iridium import build_task_allocation
+from repro.core.simulator import SimInputs
+from repro.traces.arrivals import poisson_pair_from_tables, poisson_table
+from repro.traces.bandwidth import bandwidth_draw
+from repro.traces.datasets import (
+    dataset_distribution,
+    io_slowdown_from_bandwidth,
+)
+from repro.traces.price import SiteSpec, price_trace
+from repro.traces.pue import pue_trace
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """The synthetic N = 256 fleet scenario (hashable: jit-static)."""
+
+    n_sites: int = 256
+    k_types: int = 8
+    t_slots: int = 288                 # 24 h of 5-min slots
+    slot_minutes: float = 5.0
+    jobs_per_slot: float = 80.0        # per class — fleet-scale traffic
+    a_max: float = 192.0               # P[poisson(80) > 192] ~ 1e-22
+    mu_max: float = 64.0
+    headroom: float = 1.4              # fleet capacity / offered load
+    bw_lo_gbps: float = 1.0            # fleet backbone access links
+    bw_hi_gbps: float = 40.0
+    dataset_conc: float = 0.5          # skewed layouts (ingest locality)
+    manager_share: float = 0.3
+    map_share: float = 0.6
+    n_runs: int = 100
+    trace_seed: int = 4096
+    v: float = 10.0                    # GMSA trade-off parameter
+
+
+def fleet_sites(cfg: FleetConfig) -> tuple[SiteSpec, ...]:
+    """Synthesize the fleet's per-site price/PUE climates (seeded)."""
+    rng = np.random.default_rng(cfg.trace_seed)
+    base = np.exp(rng.uniform(np.log(9.0), np.log(45.0), cfg.n_sites))
+    amp = base * rng.uniform(0.15, 0.30, cfg.n_sites)
+    noise = base * rng.uniform(0.02, 0.06, cfg.n_sites)
+    off = rng.uniform(-12.0, 12.0, cfg.n_sites)
+    pue0 = rng.uniform(1.04, 1.25, cfg.n_sites)
+    pue_amp = rng.uniform(0.01, 0.05, cfg.n_sites)
+    return tuple(
+        SiteSpec(
+            name=f"site{i:03d}",
+            region="synthetic",
+            utc_offset_h=float(off[i]),
+            base_price=float(base[i]),
+            diurnal_amp=float(amp[i]),
+            noise_std=float(noise[i]),
+            base_pue=float(pue0[i]),
+            pue_amp=float(pue_amp[i]),
+        )
+        for i in range(cfg.n_sites)
+    )
+
+
+def make_fleet_builder(
+    cfg: FleetConfig,
+) -> tuple[SimInputs, Callable]:
+    """Build the fleet scenario's inputs.
+
+    Returns:
+        (template, build_inputs): deterministic trace bundle (usable
+        directly for one run) and the per-run stochastic regenerator for
+        Monte-Carlo replication — the ``facebook_4dc`` contract at N = 256.
+    """
+    root = jax.random.key(cfg.trace_seed)
+    k_price, k_pue, k_bw, k_data, _, _ = jax.random.split(root, 6)
+
+    sites = fleet_sites(cfg)
+    omega = price_trace(k_price, cfg.t_slots, cfg.slot_minutes, sites)
+    pue = pue_trace(k_pue, cfg.t_slots, cfg.slot_minutes, sites)
+    up, down = bandwidth_draw(
+        k_bw, cfg.n_sites, lo=cfg.bw_lo_gbps, hi=cfg.bw_hi_gbps
+    )
+    data_dist = dataset_distribution(
+        k_data, cfg.k_types, cfg.n_sites, conc=cfg.dataset_conc
+    )
+    r = build_task_allocation(
+        data_dist, up, down,
+        size=1.0, manager_share=cfg.manager_share, map_share=cfg.map_share,
+    )
+    p_it = jnp.ones((cfg.k_types,), jnp.float32)
+    slowdown = io_slowdown_from_bandwidth(up, down, data_dist)
+
+    # Heterogeneous per-site capacity shares summing to `headroom` of the
+    # per-class load — big cheap sites, small expensive ones, exactly the
+    # regime GMSA arbitrages.
+    rng = np.random.default_rng(cfg.trace_seed + 1)
+    shares = rng.dirichlet(np.full(cfg.n_sites, 2.0)) * cfg.headroom
+
+    arr_cdf = jnp.asarray(poisson_table(
+        np.full((cfg.k_types,), cfg.jobs_per_slot), int(cfg.a_max)
+    ))
+    mu_mean = (
+        shares[:, None]
+        * np.asarray(slowdown, np.float64)[:, None]
+        * cfg.jobs_per_slot
+        * np.ones((1, cfg.k_types))
+    )
+    mu_cdf = jnp.asarray(poisson_table(mu_mean, int(cfg.mu_max)))
+
+    def stochastic(key) -> tuple:
+        ka, km = jax.random.split(key)
+        return poisson_pair_from_tables(ka, km, arr_cdf, mu_cdf, cfg.t_slots)
+
+    arr0, mu0 = stochastic(jax.random.fold_in(root, 99))
+    template = SimInputs(
+        arrivals=arr0, mu=mu0, omega=omega, pue=pue,
+        r=r, p_it=p_it, data_dist=data_dist,
+    )
+
+    def build_inputs(key) -> SimInputs:
+        arrivals, mu = stochastic(key)
+        return template._replace(arrivals=arrivals, mu=mu)
+
+    return template, build_inputs

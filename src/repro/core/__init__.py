@@ -35,6 +35,7 @@ from repro.core.gmsa import (
     gmsa_dispatch,
     lp_objective,
     lyapunov_drift_bound_B,
+    make_kernel_policy,
 )
 from repro.core.baselines import (
     data_dispatch,
@@ -49,6 +50,7 @@ from repro.core.iridium import (
     make_allocation_rebuilder,
 )
 from repro.core.simulator import SimInputs, SimOutputs, simulate, simulate_many
+from repro.core.sweep import simulate_sweep, sweep_grid, sweep_placed_budgets
 
 __all__ = [
     "EnergyModel",
@@ -61,6 +63,7 @@ __all__ = [
     "gmsa_dispatch",
     "lp_objective",
     "lyapunov_drift_bound_B",
+    "make_kernel_policy",
     "data_dispatch",
     "random_dispatch",
     "jsq_dispatch",
@@ -73,4 +76,7 @@ __all__ = [
     "SimOutputs",
     "simulate",
     "simulate_many",
+    "simulate_sweep",
+    "sweep_grid",
+    "sweep_placed_budgets",
 ]

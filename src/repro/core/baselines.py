@@ -40,6 +40,7 @@ def data_dispatch(key, q: Array, arrivals: Array, mu: Array, e: Array, aux: Arra
 
 
 data_dispatch.state_independent = True
+data_dispatch.consumes_key = False
 
 
 def random_dispatch(key, q: Array, arrivals: Array, mu: Array, e: Array, aux: Array, scalar=0.0) -> Array:
@@ -84,6 +85,9 @@ def jsq_dispatch(key, q: Array, arrivals: Array, mu: Array, e: Array, aux: Array
     return one_hot(best, q.shape[0], dtype=q.dtype).T
 
 
+jsq_dispatch.consumes_key = False
+
+
 def greedy_cost_dispatch(key, q: Array, arrivals: Array, mu: Array, e: Array, aux: Array, scalar=0.0) -> Array:
     """Greedy instantaneous-cost minimizer (GMSA's V -> inf limit)."""
     del key, arrivals, mu, aux, scalar
@@ -92,6 +96,7 @@ def greedy_cost_dispatch(key, q: Array, arrivals: Array, mu: Array, e: Array, au
 
 
 greedy_cost_dispatch.state_independent = True
+greedy_cost_dispatch.consumes_key = False
 
 
 def static_placement_rule(d: Array, obs) -> Array:

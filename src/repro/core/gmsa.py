@@ -25,9 +25,9 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 from jax import Array
-from jax.nn import one_hot
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,7 +65,17 @@ def drift_plus_penalty_scores(
 
 
 def gmsa_dispatch(
-    q: Array, arrivals: Array, mu: Array, e: Array, v: float | Array
+    q: Array,
+    arrivals: Array,
+    mu: Array,
+    e: Array | None,
+    v: float | Array,
+    *,
+    impl: str = "ref",
+    r: Array | None = None,
+    wpue: Array | None = None,
+    p_it: Array | None = None,
+    interpret: bool | None = None,
 ) -> Array:
     """Exact per-slot GMSA decision f(t).
 
@@ -73,10 +83,53 @@ def gmsa_dispatch(
     jobs on the score-minimizing manager. Ties break to the lowest index
     (deterministic; matches the LP vertex scipy reports for degenerate ties
     up to objective equality, which is what the tests assert).
+
+    Two implementations share this entry point:
+
+    * ``impl="ref"`` (default) — the pure-XLA closed form against the
+      precomputed per-job cost table ``e`` (the simulator's hoisted-einsum
+      path). This is the fastest route when ``e`` is already amortized
+      across slots.
+    * ``impl="kernel"`` — the fused Pallas path for fleet-scale N: score,
+      cost matvec and argmin in ONE kernel pass over the raw ``(r, wpue)``
+      operands (:mod:`repro.kernels.gmsa_score`), never materializing the
+      (K, N) score matrix in HBM between them. Requires ``r`` (K, N, N)
+      and ``wpue`` (N,) instead of ``e``; ``p_it`` defaults to ones.
+      ``interpret=None`` auto-selects interpret mode off-TPU (the CI/CPU
+      path — the compiled kernel is the TPU target), and the pure-jnp
+      oracle :func:`repro.kernels.gmsa_score.gmsa_score_ref` remains the
+      fallback for callers that want raw-(r, wpue) dispatch without
+      Pallas: pass ``impl="ref"`` with ``r``/``wpue`` and no ``e``.
     """
-    scores = drift_plus_penalty_scores(q, arrivals, mu, e, v)   # (K, N)
-    best = jnp.argmin(scores, axis=1)                           # (K,)
-    return one_hot(best, scores.shape[1], dtype=q.dtype).T      # (N, K)
+    n = q.shape[0]
+    if impl == "kernel" or (impl == "ref" and e is None):
+        if r is None or wpue is None:
+            raise ValueError(
+                f"impl={impl!r} without a precomputed cost table needs the "
+                "raw operands: pass r=(K, N, N) and wpue=(N,)"
+            )
+        p = jnp.ones_like(arrivals) if p_it is None else p_it
+        vp = jnp.asarray(v, jnp.float32) * p                    # (K,) V·P^k
+        if impl == "kernel":
+            from repro.kernels.gmsa_score.ops import gmsa_score
+
+            if interpret is None:
+                interpret = jax.default_backend() != "tpu"
+            _, best = gmsa_score(
+                q.T, mu.T, arrivals, vp, r, wpue, interpret=interpret
+            )                                                   # best (K,)
+        else:
+            from repro.kernels.gmsa_score.ref import gmsa_score_ref
+
+            _, best = gmsa_score_ref(q.T, mu.T, arrivals, vp, r, wpue)
+    elif impl == "ref":
+        scores = drift_plus_penalty_scores(q, arrivals, mu, e, v)  # (K, N)
+        best = jnp.argmin(scores, axis=1)                          # (K,)
+    else:
+        raise ValueError(f"unknown impl {impl!r}; use 'ref' or 'kernel'")
+    # One-hot built directly in (N, K) orientation — same values as
+    # one_hot(best, N).T without the transpose kernel in the hot loop.
+    return (jnp.arange(n)[:, None] == best[None, :]).astype(q.dtype)
 
 
 def lp_objective(
@@ -109,6 +162,9 @@ def gmsa_policy(key, q, arrivals, mu, e, aux, scalar):
     return gmsa_dispatch(q, arrivals, mu, e, scalar)
 
 
+gmsa_policy.consumes_key = False
+
+
 def dispatch_fn(v: float):
     """Closure adapter binding a static V (one compilation per V).
 
@@ -121,4 +177,43 @@ def dispatch_fn(v: float):
         del key, aux, scalar
         return gmsa_dispatch(q, arrivals, mu, e, v)
 
+    _policy.consumes_key = False
     return _policy
+
+
+def make_kernel_policy(
+    r: Array,
+    p_it: Array | None = None,
+    impl: str = "kernel",
+    interpret: bool | None = None,
+):
+    """GMSA policy driving dispatch through the fused Pallas kernel.
+
+    Binds the static (K, N, N) ratio tensor and routes every slot's
+    decision through ``gmsa_dispatch(..., impl=...)`` on the raw
+    ``(r, wpue)`` operands — the fleet-scale path where the kernel fuses
+    the cost matvec, the drift score and the argmin in one pass
+    (:mod:`repro.kernels.gmsa_score`). V rides in as the simulator's
+    traced ``scalar``, exactly like :func:`gmsa_policy`.
+
+    The policy declares ``wants_wpue = True``, so
+    :func:`repro.core.simulator.simulate` hands it
+    ``aux = (data_dist, omega_t * pue_t)`` per slot — this is what lets an
+    N = 256 ``configs.fleet_256`` run complete end-to-end through the
+    kernel (interpret mode on CPU/CI, compiled on TPU;
+    ``impl="ref"`` selects the pure-jnp oracle instead — the fallback
+    when Pallas is unavailable).
+    """
+    r = jnp.asarray(r, jnp.float32)
+
+    def policy(key, q, arrivals, mu, e, aux, scalar):
+        del key, e
+        _, wpue = aux
+        return gmsa_dispatch(
+            q, arrivals, mu, None, scalar,
+            impl=impl, r=r, wpue=wpue, p_it=p_it, interpret=interpret,
+        )
+
+    policy.consumes_key = False
+    policy.wants_wpue = True
+    return policy

@@ -20,7 +20,14 @@ Perf notes (EXPERIMENTS.md §Perf wall-clock track):
     than vmapped, so Monte-Carlo runs share it;
   * policies that declare ``state_independent = True`` (DATA, RANDOM) are
     evaluated for all slots in one vectorized pass outside the scan;
+  * policies that declare ``consumes_key = False`` (GMSA, JSQ, GREEDY —
+    anything that deletes its key) skip the per-slot PRNG split entirely;
   * the per-slot body is then 4 fused elementwise/contraction ops.
+
+Policies that declare ``wants_wpue = True`` receive ``aux = (data_dist,
+omega_t * pue_t)`` instead of the bare distribution — the hook the fused
+Pallas dispatch path (:func:`repro.core.gmsa.make_kernel_policy`) uses to
+see raw per-slot prices; the product is hoisted out of the scan body.
 """
 
 from __future__ import annotations
@@ -146,42 +153,65 @@ def simulate(
     scalar = jnp.asarray(scalar, jnp.float32)
 
     dd_varying = inputs.data_dist.ndim == 3                        # (T, K, N)
+    uses_key = getattr(policy, "consumes_key", True)
+    wants_wpue = getattr(policy, "wants_wpue", False)
+    wpue_all = inputs.omega * inputs.pue if wants_wpue else None
 
     f_all = None
     if getattr(policy, "state_independent", False):
         keys = jax.random.split(key, t_slots)
-        if dd_varying:
-            f_all = jax.vmap(
-                lambda kk, a, m, e, d: policy(kk, q0, a, m, e, d, scalar)
-            )(keys, inputs.arrivals, inputs.mu, e_cost_all, inputs.data_dist)
-        else:
-            f_all = jax.vmap(
-                lambda kk, a, m, e: policy(kk, q0, a, m, e, inputs.data_dist, scalar)
-            )(keys, inputs.arrivals, inputs.mu, e_cost_all)        # (T, N, K)
+
+        def call(kk, a, m, e, d, w):
+            return policy(kk, q0, a, m, e, (d, w) if wants_wpue else d,
+                          scalar)
+
+        f_all = jax.vmap(
+            call,
+            in_axes=(0, 0, 0, 0, 0 if dd_varying else None,
+                     0 if wants_wpue else None),
+        )(keys, inputs.arrivals, inputs.mu, e_cost_all,
+          inputs.data_dist, wpue_all)                              # (T, N, K)
+
+    # The PRNG key rides in the scan carry ONLY when the policy actually
+    # consumes it — for key-ignoring policies the per-slot threefry split
+    # (and the whole key chain) disappears from the compiled body.
+    keyed = f_all is None and uses_key
+    key0 = key   # signature filler for key-ignoring policies (never used)
 
     def slot(carry, xs):
-        q, key = carry
+        q, key = carry if keyed else (carry, None)
+        if wants_wpue:
+            xs, wpue_t = xs[:-1], xs[-1]
         if dd_varying:
             xs, aux = xs[:-1], xs[-1]
         else:
             aux = inputs.data_dist
+        if wants_wpue:
+            aux = (aux, wpue_t)
         if f_all is None:
             arrivals, mu, e_cost, e_raw = xs
-            key, sub = jax.random.split(key)
+            if keyed:
+                key, sub = jax.random.split(key)
+            else:
+                sub = key0
             f = policy(sub, q, arrivals, mu, e_cost, aux, scalar)
         else:
             arrivals, mu, e_cost, e_raw, f = xs
         q_next, out = slot_step(q, f, arrivals, mu, e_cost, e_raw)
-        return (q_next, key), out
+        return ((q_next, key) if keyed else q_next), out
 
     xs = (inputs.arrivals, inputs.mu, e_cost_all, e_raw_all)
     if f_all is not None:
         xs = xs + (f_all,)
     if dd_varying:
         xs = xs + (inputs.data_dist,)
-    (q_final, _), (cost, energy, btot, bavg, f_trace) = jax.lax.scan(
-        slot, (q0, key), xs
+    if wants_wpue:
+        xs = xs + (wpue_all,)
+    carry0 = (q0, key) if keyed else q0
+    final_carry, (cost, energy, btot, bavg, f_trace) = jax.lax.scan(
+        slot, carry0, xs
     )
+    q_final = final_carry[0] if keyed else final_carry
     return SimOutputs(cost, energy, btot, bavg, q_final, f_trace)
 
 

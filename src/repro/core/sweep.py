@@ -1,0 +1,116 @@
+"""One-launch parameter-sweep grids (EXPERIMENTS.md §Perf wall-clock track).
+
+The engines already make their control parameter *traced* (``scalar`` —
+GMSA's V — and, since this module landed, the placement controller's
+``move_budget``), so a parameter sweep never re-compiles. But the benches
+still launched one device program per grid point: a Fig.-6 V-sweep was 7
+launches of ``simulate_many``, a ``placement_bench --sweep`` column was one
+launch per move budget. This module stacks the swept axis *on top of* the
+Monte-Carlo vmap, so a whole grid is ONE compilation and ONE launch:
+
+    sweep_grid(build, gmsa_policy, key, 1000, V_GRID)   # (V, runs, T) out
+
+Wall-clock wins come from two places: per-launch dispatch overhead is paid
+once instead of per point, and XLA sees the whole grid at once (shared
+trace generation is hoisted across the sweep axis — the V lanes reuse one
+set of Monte-Carlo traces *per run index*, exactly as the per-point loop
+with a fixed key did).
+
+Axes convention: the swept axis is always leading — outputs are
+``SimOutputs``/``PlacedOutputs`` pytrees whose arrays carry a leading
+``(n_points,)`` axis (then ``(n_runs,)`` for the ``*_grid`` forms).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.simulator import (
+    PolicyFn,
+    SimInputs,
+    SimOutputs,
+    simulate,
+    simulate_many,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("policy",))
+def simulate_sweep(
+    inputs: SimInputs, policy: PolicyFn, key: Array, scalars: Array
+) -> SimOutputs:
+    """Run ONE trace under ``policy`` at every scalar in ``scalars``.
+
+    The vmapped axis is the *traced* control parameter (GMSA's V), so the
+    whole sweep is one compilation + one launch. Outputs carry a leading
+    ``(len(scalars),)`` axis.
+    """
+    scalars = jnp.asarray(scalars, jnp.float32)
+    return jax.vmap(lambda v: simulate(inputs, policy, key, v))(scalars)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("build_inputs", "policy", "n_runs")
+)
+def sweep_grid(
+    build_inputs: Callable[[Array], SimInputs],
+    policy: PolicyFn,
+    key: Array,
+    n_runs: int,
+    scalars: Array,
+) -> SimOutputs:
+    """A full Monte-Carlo sweep at every scalar — one compilation, one launch.
+
+    ``vmap(scalars) ∘ vmap(runs) ∘ scan(slots)``: the Fig.-6 grid shape.
+    Every scalar lane sees the SAME per-run stochastic traces (the key is
+    shared across lanes, exactly like calling ``simulate_many`` per point
+    with a fixed key), so the V-axis comparison is paired, not just
+    distributionally matched. Outputs: leading ``(len(scalars), n_runs)``.
+    """
+    scalars = jnp.asarray(scalars, jnp.float32)
+    return jax.vmap(
+        lambda v: simulate_many(build_inputs, policy, key, n_runs, v)
+    )(scalars)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("build_inputs", "policy", "rule", "cfg", "n_runs"),
+)
+def sweep_placed_budgets(
+    build_inputs: Callable[[Array], SimInputs],
+    up: Array,
+    down: Array,
+    policy: PolicyFn,
+    rule,
+    key: Array,
+    n_runs: int,
+    cfg,
+    budgets: Array,
+    scalar: float | Array = 0.0,
+    ingest: Array | None = None,
+    sizes_gb: Array | None = None,
+    alive: Array | None = None,
+):
+    """One-launch move-budget sweep of the two-timescale controller.
+
+    The epoch structure (``cfg.epoch_slots``) is static — one compilation
+    per W — but the per-epoch correction step alpha is data, so a whole
+    ``placement_bench --sweep`` column (all move budgets at one W) runs as
+    ONE launch via the controller's traced ``move_budget`` override.
+    Outputs: ``PlacedOutputs`` with leading ``(len(budgets), n_runs)``.
+    """
+    from repro.placement.controller import simulate_placed_many
+
+    budgets = jnp.asarray(budgets, jnp.float32)
+    return jax.vmap(
+        lambda b: simulate_placed_many(
+            build_inputs, up, down, policy, rule, key, n_runs, cfg,
+            scalar=scalar, ingest=ingest, sizes_gb=sizes_gb, alive=alive,
+            move_budget=b,
+        )
+    )(budgets)

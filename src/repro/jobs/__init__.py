@@ -45,9 +45,9 @@ from repro.jobs.engine import (
 from repro.jobs.scheduler import (
     flow_step,
     make_staged_policy,
-    shuffle_price,
     stage_oblivious,
     stage_service_rates,
+    stage_service_rates_all,
     staged_dispatch_fn,
     staged_stage_scores,
 )
@@ -66,9 +66,9 @@ __all__ = [
     "summarize_staged",
     "flow_step",
     "make_staged_policy",
-    "shuffle_price",
     "stage_oblivious",
     "stage_service_rates",
+    "stage_service_rates_all",
     "staged_dispatch_fn",
     "staged_stage_scores",
 ]

@@ -3,13 +3,17 @@
 Generalizes :func:`repro.core.simulator.simulate` from one queue per
 (DC, type) to one per (DC, type, stage): per slot, each stage's inflow is
 dispatched by the policy's (N, K, S) decision, Eq. 1 advances every stage
-queue (via the shared :func:`repro.core.simulator.slot_step` body — the
-equivalence with ``simulate`` is structural), completions flow down the
-chain within the slot (a tandem of queues), and the intermediate bytes
+queue (the scan body evaluates :func:`repro.core.simulator.slot_step`'s
+own expressions with the stage axis folded into the type axis, so the
+single-stage equivalence with ``simulate`` stays bitwise — pinned in
+tests), completions flow down the chain within the slot (a tandem of
+queues), and the intermediate bytes
 each hop ships across the WAN are billed through
-:func:`repro.placement.wan.transfer_plan` / ``transfer_cost`` — the
-surplus/deficit coupling, so a stage whose destination mix equals its
-source mix (a data-local map, a co-located reduce) moves nothing.
+:func:`repro.placement.wan.plan_cost` — the fused bilinear form of
+``transfer_cost(transfer_plan(...))``, same surplus/deficit coupling
+semantics (a stage whose destination mix equals its source mix — a
+data-local map, a co-located reduce — moves nothing) but no (K, N, N)
+plan is ever materialized in the scan body.
 
 The per-slot semantics, stage by stage (s = 0..S-1, a static unrolled
 loop):
@@ -18,8 +22,8 @@ loop):
                                             upstream completions
     Q^{k,s}    + Eq. 1 under (in, mu / c^{k,s})
     done^{k,s} = min(Q + in, mu/c)          flows to stage s+1 (or out)
-    WAN bill   = transfer_cost(transfer_plan(src^{k,s}, f^{k,s},
-                               F^{k,s} * G^{k,s}))
+    WAN bill   = plan_cost(src^{k,s}, f^{k,s}, F^{k,s} * G^{k,s})
+                 (== transfer_cost(transfer_plan(...)) to ≤ 1e-5 rel.)
 
 With a single-stage dag (compute 1, shuffle 0) every extra term is an
 exact float identity and ``simulate_staged`` reproduces ``simulate``'s
@@ -49,11 +53,15 @@ from repro.core.simulator import (
     PolicyFn,
     SimInputs,
     _energy_tables,
-    slot_step,
 )
 from repro.jobs.dag import StageDag
-from repro.jobs.scheduler import flow_step, stage_oblivious, stage_service_rates
-from repro.placement.wan import WanModel, transfer_cost, transfer_plan
+from repro.jobs.scheduler import stage_oblivious, stage_service_rates_all
+from repro.placement.wan import WanModel, plan_cost
+
+#: Zero-flow guard for the source-mix normalization — the same epsilon
+#: :func:`repro.jobs.scheduler.flow_step` uses, so the engine's replayed
+#: mixes equal the policy lookahead's exactly.
+_EPS = 1e-12
 
 
 class StagedOutputs(NamedTuple):
@@ -69,14 +77,6 @@ class StagedOutputs(NamedTuple):
     wan_energy: Array     # (T,) WAN energy (job-energy equivalents)
     wan_gb: Array         # (T,) intermediate GB crossing the WAN
     completed: Array      # (T, K) jobs finishing their last stage per slot
-
-
-def _chain_sum(terms: list) -> Array:
-    """Left-fold sum that is the identity for one term (bit-exactness)."""
-    acc = terms[0]
-    for t in terms[1:]:
-        acc = acc + t
-    return acc
 
 
 @functools.partial(jax.jit, static_argnames=("policy",))
@@ -116,8 +116,27 @@ def simulate_staged(
     wpue_all = inputs.omega * inputs.pue                           # (T, N)
     scalar = jnp.asarray(scalar, jnp.float32)
 
+    # Perf (EXPERIMENTS.md §Perf): everything per-slot-invariant is hoisted
+    # out of the scan body — per-stage service rates (mu / c), the per-stage
+    # energy tables (e * c, already laid out (K, S, N) so the in-body
+    # flatten to (K·S, N) is a free reshape) and omega*PUE are computed for
+    # all T slots in one pass each. Stage padding uses exact identities
+    # (c = 1.0), so the single-stage tables are bitwise the base engine's.
+    mu_stage_all = stage_service_rates_all(inputs.mu, dag)         # (T,N,K,S)
+    ec_stage_all = e_cost_all[:, :, None, :] * dag.compute[None, :, :, None]
+    er_stage_all = e_raw_all[:, :, None, :] * dag.compute[None, :, :, None]
+
     pol = policy if getattr(policy, "staged", False) else stage_oblivious(policy)
+    uses_key = getattr(pol, "consumes_key", True)
+    returns_flow = getattr(pol, "returns_flow", False)
     dd_varying = inputs.data_dist.ndim == 3                        # (T, K, N)
+
+    if returns_flow and getattr(pol, "state_independent", False):
+        raise ValueError(
+            "returns_flow policies are state-dependent by construction "
+            "(the exported inflows depend on the live backlog); do not "
+            "also mark them state_independent"
+        )
 
     f_all = None
     if getattr(pol, "state_independent", False):
@@ -134,80 +153,122 @@ def simulate_staged(
                 )
             )(keys, inputs.arrivals, inputs.mu, e_cost_all, wpue_all)
 
+    keyed = f_all is None and uses_key
+    key0 = key   # for key-ignoring policies (signature filler, never used)
+
     def slot(carry, xs):
-        q, key = carry
+        q, key = carry if keyed else (carry, None)
         if dd_varying:
             xs, dd_t = xs[:-1], xs[-1]
         else:
             dd_t = inputs.data_dist
-        arrivals, mu, e_cost, e_raw, omega_t, pue_t = xs[:6]
-        rest = xs[6:]
+        arrivals, mu, e_cost, mu_stages, wpue_t = xs[:5]
+        rest = xs[5:]
         if f_all is None:
-            key, sub = jax.random.split(key)
-            wpue_t = omega_t * pue_t
-            f = pol(sub, q, arrivals, mu, e_cost, (dd_t, wpue_t), scalar)
+            if keyed:
+                key, sub = jax.random.split(key)
+            else:
+                sub = key0   # key-ignoring policy: no per-slot split
+            ret = pol(sub, q, arrivals, mu, e_cost, (dd_t, wpue_t), scalar)
         else:
-            (f,) = rest
+            (ret,) = rest
 
-        mu_stages = stage_service_rates(mu, dag)                   # (N, K, S)
-        total_in = arrivals                                        # (K,)
-        src = dd_t                                                 # (K, N)
-        costs, energies, btots, bavgs = [], [], [], []
-        wan_cs, wan_es, wan_gbs = [], [], []
-        q_cols = []
-        completed = jnp.zeros((k_types,), jnp.float32)
-        for s in range(s_max):
-            f_s = f[:, :, s]                                       # (N, K)
-            mu_s = mu_stages[:, :, s]
-            ec_s = e_cost * dag.compute[:, s, None]                # (K, N)
-            er_s = e_raw * dag.compute[:, s, None]
-            # Intermediate bytes: only the source/destination mismatch
-            # crosses the WAN (transfer_plan's surplus/deficit coupling).
-            vol = total_in * dag.shuffle_gb[:, s]                  # (K,)
-            plan = transfer_plan(src, f_s.T, vol)                  # (K, N, N)
-            wc, we, wgb = transfer_cost(plan, wan, omega_t, pue_t)
-            q_next_s, (c_s, en_s, bt_s, ba_s, _) = slot_step(
-                q[:, :, s], f_s, total_in, mu_s, ec_s, er_s
-            )
-            total_done, src = flow_step(q[:, :, s], f_s, total_in, mu_s)
-            nxt = (
-                dag.stage_mask[:, s + 1]
-                if s + 1 < s_max
-                else jnp.zeros((k_types,), jnp.float32)
-            )
-            completed = completed + total_done * (dag.stage_mask[:, s] - nxt)
-            total_in = total_done * nxt
-            q_cols.append(q_next_s)
-            costs.append(c_s)
-            energies.append(en_s)
-            btots.append(bt_s)
-            bavgs.append(ba_s)
-            wan_cs.append(wc)
-            wan_es.append(we)
-            wan_gbs.append(wgb)
+        # Within-slot tandem flow — the only genuinely sequential part,
+        # stripped to its recursion: per stage, the inflow lands on the
+        # backlog (acc = Q + f·F, the inside of Eq. 1's max — exactly
+        # ``slot_step``'s ``q + fa``), completions are min(acc, mu), and
+        # their total seeds the next stage. Policies that walked this
+        # exact chain already (``returns_flow = True`` — the stage-aware
+        # scheduler's lookahead shares flow_step's definition) export the
+        # per-stage inflows and the recursion is skipped entirely.
+        # Everything derivable from (f, acc, ins) — cost/energy accrual,
+        # backlogs, source mixes, shuffle volumes, completions, the WAN
+        # bill — is recomputed vectorized over all T slots AFTER the
+        # scan, keeping the per-slot body minimal.
+        if returns_flow:
+            f, in_stack = ret
+            acc = q + f * in_stack[None, :, :]                     # (N, K, S)
+        else:
+            f = ret
+            total_in = arrivals                                    # (K,)
+            ins, accs = [], []
+            for s in range(s_max):
+                ins.append(total_in)
+                acc_s = q[:, :, s] + f[:, :, s] * total_in[None, :]
+                accs.append(acc_s)
+                if s + 1 < s_max:
+                    done_s = jnp.minimum(acc_s, mu_stages[:, :, s])
+                    total_in = (jnp.sum(done_s, axis=0)
+                                * dag.stage_mask[:, s + 1])
+            acc = jnp.stack(accs, axis=-1)                         # (N, K, S)
+            in_stack = jnp.stack(ins, axis=-1)                     # (K, S)
 
-        q_next = jnp.stack(q_cols, axis=-1)                        # (N, K, S)
-        out = (
-            _chain_sum(costs),
-            _chain_sum(energies),
-            _chain_sum(btots),
-            _chain_sum(bavgs) / s_max,
-            f,
-            _chain_sum(wan_cs),
-            _chain_sum(wan_es),
-            _chain_sum(wan_gbs),
-            completed,
-        )
-        return (q_next, key), out
+        # Eq. 1 for ALL stages at once, the stage axis folded into the
+        # type axis (one queue per (DC, type·stage)). The expression is
+        # ``slot_step``'s own — ``max((q + fa) - mu, 0)`` — and for S = 1
+        # every reshape is the identity, keeping the single-stage path
+        # bitwise the base engine's.
+        q_next = jnp.maximum(acc - mu_stages, 0.0)
 
-    xs = (inputs.arrivals, inputs.mu, e_cost_all, e_raw_all,
-          inputs.omega, inputs.pue)
+        out = (f, acc, in_stack)
+        return ((q_next, key) if keyed else q_next), out
+
+    xs = (inputs.arrivals, inputs.mu, e_cost_all, mu_stage_all, wpue_all)
     if f_all is not None:
         xs = xs + (f_all,)
     if dd_varying:
         xs = xs + (inputs.data_dist,)
-    (q_final, _), (cost, energy, btot, bavg, f_trace, wan_c, wan_e,
-                   wan_gb, completed) = jax.lax.scan(slot, (q0, key), xs)
+    carry0 = (q0, key) if keyed else q0
+    final_carry, (f_trace, acc_all, in_all) = jax.lax.scan(slot, carry0, xs)
+    q_final = final_carry[0] if keyed else final_carry
+
+    # Everything the scan body did NOT compute, recovered vectorized over
+    # all T slots from (f, acc, ins) — the expressions are ``slot_step``'s
+    # and ``flow_step``'s own, evaluated batched so each is one kernel for
+    # the whole horizon instead of T per-slot launches:
+    #   * cost/energy: sum(fa * e.T) with fa = f * in;
+    #   * backlogs: q_next = max(acc - mu, 0) summed/averaged;
+    #   * completions per stage: min(acc, mu) summed over sites;
+    #   * source mixes + shuffle volumes + the WAN bill — billed for ALL
+    #     (slot, stage) pairs in ONE fused batched plan_cost call, stages
+    #     folded into the type axis; no (K, N, N) plan is materialized.
+    fa_all = f_trace * in_all[:, None]                             # (T,N,K,S)
+    cost = jnp.sum(fa_all * ec_stage_all.transpose(0, 3, 1, 2),
+                   axis=(1, 2, 3))                                 # (T,)
+    energy = jnp.sum(fa_all * er_stage_all.transpose(0, 3, 1, 2),
+                     axis=(1, 2, 3))
+    q_next_all = jnp.maximum(acc_all - mu_stage_all, 0.0)          # (T,N,K,S)
+    btot = jnp.sum(q_next_all, axis=(1, 2, 3))
+    bavg = btot / jnp.float32(n * k_types * s_max)
+    done_all = jnp.minimum(acc_all, mu_stage_all)                  # (T,N,K,S)
+    td_all = jnp.sum(done_all, axis=1)                             # (T,K,S)
+    nxt = jnp.concatenate(
+        [dag.stage_mask[:, 1:], jnp.zeros((k_types, 1), jnp.float32)], axis=1
+    )
+    completed = jnp.einsum("tks,ks->tk", td_all, dag.stage_mask - nxt)
+
+    dd_all = (
+        inputs.data_dist
+        if dd_varying
+        else jnp.broadcast_to(inputs.data_dist, (t_slots, k_types, n))
+    )                                                              # (T, K, N)
+    if s_max == 1:
+        src_all = dd_all[:, None]                                  # (T,1,K,N)
+    else:
+        done_up = done_all[:, :, :, :-1].transpose(0, 3, 2, 1)     # (T,S-1,K,N)
+        td_up = td_all[:, :, :-1].transpose(0, 2, 1)[..., None]    # (T,S-1,K,1)
+        src_up = jnp.where(
+            td_up > _EPS, done_up / jnp.maximum(td_up, _EPS), 1.0 / n
+        )                                                          # (T,S-1,K,N)
+        src_all = jnp.concatenate([dd_all[:, None], src_up], axis=1)
+    dst_all = f_trace.transpose(0, 3, 2, 1)                        # (T,S,K,N)
+    vol_all = (in_all * dag.shuffle_gb[None]).transpose(0, 2, 1)   # (T,S,K)
+    wan_c, wan_e, wan_gb = plan_cost(
+        src_all.reshape(t_slots, s_max * k_types, n),
+        dst_all.reshape(t_slots, s_max * k_types, n),
+        vol_all.reshape(t_slots, s_max * k_types),
+        wan, inputs.omega, inputs.pue,
+    )                                                              # (T,) each
     return StagedOutputs(
         cost=cost, energy=energy, backlog_total=btot, backlog_avg=bavg,
         q_final=q_final, f_trace=f_trace,

@@ -37,25 +37,12 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 from jax import Array
-from jax.nn import one_hot
 
 from repro.core.gmsa import drift_plus_penalty_scores
 from repro.jobs.dag import StageDag
-from repro.placement.wan import WanModel, link_price_matrix
+from repro.placement.wan import WanModel, expected_pull
 
 _EPS = 1e-12
-
-
-def shuffle_price(wan: WanModel, wpue: Array) -> Array:
-    """(N, N) $-per-GB link prices, matching ``transfer_cost`` semantics.
-
-    price[j, i] — shipping one GB j -> i draws ``energy_per_gb`` half at
-    each endpoint, at that endpoint's current price*PUE; the diagonal is
-    zero (local hand-off is free). Derived from the shared
-    :func:`repro.placement.wan.link_price_matrix`, so the score's WAN
-    term and ``transfer_cost``'s bill cannot drift apart.
-    """
-    return link_price_matrix(wpue) * wan.energy_per_gb
 
 
 def stage_service_rates(mu: Array, dag: StageDag) -> Array:
@@ -67,6 +54,17 @@ def stage_service_rates(mu: Array, dag: StageDag) -> Array:
     identity — the single-stage dag reproduces ``mu`` bit for bit).
     """
     return mu[:, :, None] / dag.compute[None, :, :]
+
+
+def stage_service_rates_all(mu_all: Array, dag: StageDag) -> Array:
+    """(T, N, K, S) per-stage service rates for a whole trace in one op.
+
+    The hoisted form of :func:`stage_service_rates` — the staged engine
+    computes it once outside its scan body instead of per slot. Identical
+    values (same ``mu / c`` divide, padded stages at the exact-identity
+    intensity 1.0).
+    """
+    return mu_all[..., None] / dag.compute[None, None, :, :]
 
 
 def flow_step(
@@ -104,18 +102,19 @@ def staged_stage_scores(
     e: Array,
     compute_s: Array,
     shuffle_gb_s: Array,
-    src: Array,
-    price: Array,
+    pull: Array,
     v: float | Array,
 ) -> Array:
     """(K, N) drift-plus-penalty scores for one stage's site choice.
 
     The base GMSA score (:func:`repro.core.gmsa.drift_plus_penalty_scores`)
     with the per-job penalty extended by the stage's WAN pull term:
-    ``e_stage[k, i] = compute_s[k] * e[k, i]
-    + shuffle_gb_s[k] * sum_j src[k, j] * price[j, i]``.
+    ``e_stage[k, i] = compute_s[k] * e[k, i] + shuffle_gb_s[k] * pull[k, i]``
+    where ``pull[k, i] = sum_j src[k, j] * price[j, i]`` — the expected
+    $-per-GB of pulling the upstream output mix to site i, computed fused
+    by :func:`repro.placement.wan.expected_pull` (no (N, N) price matrix
+    materialized per slot).
     """
-    pull = src @ price                                             # (K, N)
     e_stage = compute_s[:, None] * e + shuffle_gb_s[:, None] * pull
     return drift_plus_penalty_scores(q_s, total_in, mu_s, e_stage, v)
 
@@ -142,31 +141,43 @@ def make_staged_policy(dag: StageDag, wan: WanModel, pin_map: bool = True):
         del key
         data_dist, wpue = aux
         n = q.shape[0]
-        price = shuffle_price(wan, wpue)                           # (N, N)
         mu_stages = stage_service_rates(mu, dag)                   # (N, K, S)
         total_in = arrivals                                        # (K,)
         src = data_dist                                            # (K, N)
-        cols = []
+        cols, ins = [], []
         for s in range(dag.s_max):
             mu_s = mu_stages[:, :, s]
             if s == 0 and pin_map:
                 f_s = data_dist.T                                  # (N, K)
             else:
+                # Fused expected-pull pricing (link_price_matrix *
+                # energy_per_gb semantics, no (N, N) matrix in the
+                # per-slot body; src is on the simplex by the flow_step
+                # contract).
+                pull = (expected_pull(src, wpue, assume_simplex=True)
+                        * wan.energy_per_gb)
                 scores = staged_stage_scores(
                     q[:, :, s], total_in, mu_s, e,
                     dag.compute[:, s], dag.shuffle_gb[:, s],
-                    src, price, scalar,
+                    pull, scalar,
                 )                                                  # (K, N)
-                f_s = one_hot(
-                    jnp.argmin(scores, axis=1), n, dtype=q.dtype
-                ).T                                                # (N, K)
+                f_s = (
+                    jnp.arange(n)[:, None] == jnp.argmin(scores, axis=1)[None]
+                ).astype(q.dtype)                                  # (N, K)
             cols.append(f_s)
+            ins.append(total_in)
             total_done, src = flow_step(q[:, :, s], f_s, total_in, mu_s)
             if s + 1 < dag.s_max:
                 total_in = total_done * dag.stage_mask[:, s + 1]
-        return jnp.stack(cols, axis=-1)                            # (N, K, S)
+        # The lookahead already walked the exact within-slot flow the
+        # engine would re-derive (flow_step is the shared definition), so
+        # export the per-stage inflows and let the engine skip its own
+        # recursion (``returns_flow`` contract of ``simulate_staged``).
+        return jnp.stack(cols, axis=-1), jnp.stack(ins, axis=-1)   # f, (K, S)
 
     policy.staged = True
+    policy.consumes_key = False
+    policy.returns_flow = True
     return policy
 
 
@@ -180,6 +191,8 @@ def staged_dispatch_fn(dag: StageDag, wan: WanModel, v: float,
         return base(key, q, arrivals, mu, e, aux, v)
 
     policy.staged = True
+    policy.consumes_key = False
+    policy.returns_flow = True
     return policy
 
 
@@ -214,4 +227,5 @@ def stage_oblivious(policy, pin_map: bool = False):
 
     staged.staged = True
     staged.state_independent = getattr(policy, "state_independent", False)
+    staged.consumes_key = getattr(policy, "consumes_key", True)
     return staged

@@ -42,8 +42,11 @@ from repro.placement.replica import (
 )
 from repro.placement.wan import (
     WanModel,
+    evacuation_cost,
     evacuation_plan,
+    expected_pull,
     link_price_matrix,
+    plan_cost,
     transfer_cost,
     transfer_latency,
     transfer_plan,
@@ -67,8 +70,11 @@ __all__ = [
     "sync_cost",
     "target_placement",
     "WanModel",
+    "evacuation_cost",
     "evacuation_plan",
+    "expected_pull",
     "link_price_matrix",
+    "plan_cost",
     "transfer_cost",
     "transfer_latency",
     "transfer_plan",

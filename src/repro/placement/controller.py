@@ -28,10 +28,13 @@ the dead sites' backlog re-injects as an arrival burst, their dataset share
 re-replicates over the survivors, the slow rule re-places restricted to
 survivors, and the emergency WAN burst is billed into
 ``PlacedOutputs.recovery_cost``. Everything stays one jit'd scan-of-scans
-(the recovery epoch is a select on the mask edge), and with an all-ones
-mask the fault path is bit-exact with the no-fault path — every masking op
-is either an exact float identity (``* 1.0``, ``+ 0.0``) or guarded by a
-``jnp.where`` on the edge condition.
+— the recovery epoch is a ``lax.cond`` on the death edge, so the heavy
+branch (rule re-place, Iridium rebuild, fused evacuation billing) executes
+only on the handful of slots where a site actually dies and the no-edge
+slot body stays the base engine's few fused ops — and with an all-ones
+mask the fault path is bit-exact with the no-fault path: every masking op
+is either an exact float identity (``* 1.0``, ``+ 0.0``), a select, or
+behind the never-taken cond branch.
 """
 
 from __future__ import annotations
@@ -57,8 +60,8 @@ from repro.placement.replica import sync_cost as replica_sync_cost
 from repro.traces.datasets import io_slowdown_from_bandwidth
 from repro.placement.wan import (
     DEFAULT_ENERGY_PER_GB,
-    evacuation_plan,
-    transfer_cost,
+    evacuation_cost,
+    plan_cost,
     transfer_latency,
     transfer_plan,
     wan_topology,
@@ -191,6 +194,7 @@ def simulate_placed(
     ingest: Array | None = None,
     sizes_gb: Array | None = None,
     alive: Array | None = None,
+    move_budget: Array | None = None,
 ) -> PlacedOutputs:
     """Run the two-timescale controller over one trace.
 
@@ -220,6 +224,12 @@ def simulate_placed(
             ``recovery_cost``. Dead sites receive no dispatch and serve
             nothing while down; an all-ones mask reproduces the no-fault
             outputs bit for bit.
+        move_budget: optional *traced* override of ``cfg.move_budget`` —
+            the hook :func:`repro.core.sweep.sweep_placed_budgets` uses to
+            vmap a whole move-budget sweep through ONE compilation (the
+            epoch structure stays static, the step size becomes data).
+            ``None`` (default) uses the static config value, bit-exact
+            with the pre-override behavior.
     """
     t_slots, k_types = inputs.arrivals.shape
     n = inputs.mu.shape[1]
@@ -258,6 +268,9 @@ def simulate_placed(
             jnp.asarray(cfg.dataset_gb, jnp.float32), (n_epochs, k_types)
         )
     scalar = jnp.asarray(scalar, jnp.float32)
+    mb = cfg.move_budget if move_budget is None else jnp.asarray(
+        move_budget, jnp.float32
+    )
     p_it = inputs.p_it
 
     ep = lambda x: x.reshape((n_epochs, w) + x.shape[1:])
@@ -267,8 +280,12 @@ def simulate_placed(
 
     # Match ``simulate``'s PRNG stream exactly on both of its policy paths:
     # state-independent policies consume split(key, T)[t] per slot (the
-    # precomputed-vmap path), everything else splits the carried key.
+    # precomputed-vmap path), everything else splits the carried key —
+    # except key-ignoring policies (``consumes_key = False``: GMSA, JSQ,
+    # GREEDY), whose per-slot threefry split is skipped entirely, exactly
+    # as ``simulate`` skips it.
     state_ind = getattr(policy, "state_independent", False)
+    uses_key = getattr(policy, "consumes_key", True)
     keys_ep = ep(jax.random.split(key, t_slots)) if state_ind else None
 
     q0 = jnp.zeros((n, k_types), jnp.float32)
@@ -339,12 +356,15 @@ def simulate_placed(
             # whether the plugged-in rule is survivor-aware.
             t_m = _survivor_renorm(target * alive_b[None, :], d_drift, axis=1)
             target = jnp.where(any_dead_b, t_m, target)
-        stepped = d_drift + cfg.move_budget * (target - d_drift)
+        stepped = d_drift + mb * (target - d_drift)
         stepped = stepped / jnp.maximum(jnp.sum(stepped, axis=1, keepdims=True), _EPS)
         d_new = jnp.where(is_first, d, stepped)
-        plan = transfer_plan(d_drift, d_new, size_e)                  # (K, N, N)
-        wan_c, wan_e, wan_gb = transfer_cost(plan, wan, om_e[0], pu_e[0])
-        wan_lat = transfer_latency(plan, wan)
+        # Fused billing (no (K, N, N) plan for the $ numbers); the plan is
+        # still materialized once per epoch boundary for the bottleneck
+        # latency, which needs the per-link bytes.
+        wan_c, wan_e, wan_gb = plan_cost(d_drift, d_new, size_e, wan,
+                                         om_e[0], pu_e[0])
+        wan_lat = transfer_latency(transfer_plan(d_drift, d_new, size_e), wan)
         # Ongoing replication premium: every epoch, each replica beyond the
         # first absorbs update_fraction of its dataset at the epoch-mean price.
         sync_c = replica_sync_cost(
@@ -375,8 +395,10 @@ def simulate_placed(
             rest2 = xs2[4:]
             if state_ind:
                 sub, rest2 = rest2[0], rest2[1:]
-            else:
+            elif uses_key:
                 key2, sub = jax.random.split(key2)
+            else:
+                sub = key2   # key-ignoring policy: no per-slot split
             aux = d_new
             if faulty:
                 alive_t, alive_prev_t, om_t, pu_t = rest2
@@ -391,37 +413,60 @@ def simulate_placed(
                 )
                 arrivals = arrivals + burst
                 mu = mu * alive_t[:, None]
-                # ---- the off-schedule recovery epoch (a select on the
-                # death edge): rule re-places restricted to survivors, the
-                # evacuation + move burst is billed at this slot's prices.
-                obs_r = SlowObs(
-                    wpue_bar=wpue_t, mu_bar=mu, q=q2,
-                    sizes_gb=size_e, capacity_gb=cap, alive=alive_t,
+
+                # ---- the off-schedule recovery epoch, gated by lax.cond
+                # on the death edge: the heavy branch (rule re-place,
+                # Iridium rebuild, fused evacuation + move billing) runs
+                # ONLY on the handful of slots where a site actually dies
+                # — every no-edge slot takes the trivial branch and the
+                # slot body stays the base engine's few fused ops. The
+                # predicate depends only on the (unbatched) alive trace,
+                # so the cond survives the Monte-Carlo vmap as a cond.
+                def recover(q_r, d_masked_r, d_drop_r, mu_r):
+                    obs_r = SlowObs(
+                        wpue_bar=wpue_t, mu_bar=mu_r, q=q_r,
+                        sizes_gb=size_e, capacity_gb=cap, alive=alive_t,
+                    )
+                    tgt = _survivor_renorm(
+                        rule(d_drop_r, obs_r) * alive_t[None, :],
+                        d_drop_r, axis=1,
+                    )
+                    d_rec = d_drop_r + mb * (tgt - d_drop_r)
+                    d_rec = d_rec / jnp.maximum(
+                        jnp.sum(d_rec, axis=1, keepdims=True), _EPS
+                    )
+                    # Fused billing: cost(evac + move) = cost(evac) +
+                    # cost(move) — pricing is linear in the plan, and no
+                    # (K, N, N) plan is materialized on the fault path.
+                    ev_c, _, ev_g = evacuation_cost(
+                        d_masked_r, d_drop_r, size_e, wan, om_t, pu_t
+                    )
+                    mv_c, _, mv_g = plan_cost(
+                        d_drop_r, d_rec, size_e, wan, om_t, pu_t
+                    )
+                    r_rec = rebuild(d_rec) * alive_t[None, None, :]
+                    r_rec = r_rec / jnp.maximum(
+                        jnp.sum(r_rec, axis=-1, keepdims=True), _EPS
+                    )
+                    return d_rec, r_rec, ev_c + mv_c, ev_g + mv_g
+
+                def no_recover(q_r, d_masked_r, d_drop_r, mu_r):
+                    zero = jnp.zeros((), jnp.float32)
+                    return d_c, r_c, zero, zero
+
+                d_c, r_c, rec_cost, rec_gb = jax.lax.cond(
+                    any_died, recover, no_recover, q2, d_masked, d_drop, mu
                 )
-                tgt = _survivor_renorm(
-                    rule(d_drop, obs_r) * alive_t[None, :], d_drop, axis=1
-                )
-                d_rec = d_drop + cfg.move_budget * (tgt - d_drop)
-                d_rec = d_rec / jnp.maximum(
-                    jnp.sum(d_rec, axis=1, keepdims=True), _EPS
-                )
-                rec_plan = (evacuation_plan(d_masked, d_drop, size_e)
-                            + transfer_plan(d_drop, d_rec, size_e))
-                rec_c, _, rec_g = transfer_cost(rec_plan, wan, om_t, pu_t)
-                r_rec = rebuild(d_rec) * alive_t[None, None, :]
-                r_rec = r_rec / jnp.maximum(
-                    jnp.sum(r_rec, axis=-1, keepdims=True), _EPS
-                )
-                d_c = jnp.where(any_died, d_rec, d_c)
-                r_c = jnp.where(any_died, r_rec, r_c)
                 fired = jnp.logical_or(fired, any_died)
-                rec_cost = jnp.where(any_died, rec_c, 0.0)
-                rec_gb = jnp.where(any_died, rec_g, 0.0)
                 # Epoch tables go stale the moment a recovery re-places
-                # mid-epoch; re-derive this slot's row from the carried r.
-                ec_f, er_f = energy_row(r_c, wpue_t, pu_t, p_it)
-                ec = jnp.where(fired, ec_f, ec)
-                er = jnp.where(fired, er_f, er)
+                # mid-epoch; re-derive this slot's row from the carried r
+                # (also cond-gated: no fault so far -> no extra einsums).
+                ec, er = jax.lax.cond(
+                    fired,
+                    lambda rr: energy_row(rr, wpue_t, pu_t, p_it),
+                    lambda rr: (ec, er),
+                    r_c,
+                )
                 aux = d_c
             f = policy(sub, q2, arrivals, mu, ec, aux, scalar)
             if faulty:
@@ -496,6 +541,7 @@ def simulate_placed_many(
     ingest: Array | None = None,
     sizes_gb: Array | None = None,
     alive: Array | None = None,
+    move_budget: Array | None = None,
 ) -> PlacedOutputs:
     """Monte-Carlo replication of :func:`simulate_placed` (vmap over keys).
 
@@ -510,6 +556,7 @@ def simulate_placed_many(
         return simulate_placed(
             build_inputs(k_build), up, down, policy, rule, k_sim, cfg,
             scalar=scalar, ingest=ingest, sizes_gb=sizes_gb, alive=alive,
+            move_budget=move_budget,
         )
 
     return jax.vmap(one)(keys)

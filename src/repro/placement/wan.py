@@ -136,6 +136,134 @@ def evacuation_plan(
     return w * need[:, None, :]
 
 
+def plan_cost(
+    d_old: Array,
+    d_new: Array,
+    sizes_gb: Array,
+    wan: WanModel,
+    omega: Array,
+    pue: Array,
+) -> tuple[Array, Array, Array]:
+    """Fused ``transfer_cost(transfer_plan(...))`` — no (K, N, N) ever built.
+
+    The product-coupling plan is rank-1 per type (``plan[k] = out_k ⊗
+    share_k``) and the endpoint-mean link price is rank-2
+    (``P = 0.5 (w 1ᵀ + 1 wᵀ)``), so the whole bill collapses to the
+    bilinear form ``Σ_k out_kᵀ · P · share_k`` evaluated with four (K,)
+    contractions:
+
+        cost = epg * 0.5 * Σ_k [ (out_k·w) * Σ_j share_kj
+                                 + (Σ_i out_ki) * (share_k·w) ]
+
+    (the plan's diagonal is exactly zero — a site never both exports and
+    imports — so including P's diagonal is exact). This is the hot-loop
+    form: the staged engine bills all S stages of all T slots in one
+    batched call and the controller bills every recovery edge through it.
+    Matches the materialized ``transfer_cost(transfer_plan(...))`` to
+    float-reassociation tolerance (pinned ≤ 1e-5 relative in tests);
+    callers needing the plan itself (e.g. :func:`transfer_latency`) keep
+    using :func:`transfer_plan`.
+
+    Args:
+        d_old: (..., K, N) current placement (rows on the simplex).
+        d_new: (..., K, N) target placement.
+        sizes_gb: (..., K) dataset sizes in GB.
+        wan: the :class:`WanModel`.
+        omega: (..., N) prices; pue: (..., N) PUE.
+
+    Returns:
+        (cost, energy, gb_moved) — each (...,); scalars for unbatched
+        inputs, the same contract as :func:`transfer_cost`.
+    """
+    delta = d_new - d_old                                        # (..., K, N)
+    out_gb = jnp.maximum(-delta, 0.0) * sizes_gb[..., None]      # exports
+    in_gb = jnp.maximum(delta, 0.0) * sizes_gb[..., None]        # imports
+    total = jnp.sum(in_gb, axis=-1, keepdims=True)               # (..., K, 1)
+    share = in_gb / jnp.maximum(total, 1e-12)                    # (..., K, N)
+    o_tot = jnp.sum(out_gb, axis=-1)                             # (..., K)
+    s_tot = jnp.sum(share, axis=-1)                              # ~ {0, 1}
+    wpue = omega * pue
+
+    def bilinear(w: Array) -> Array:
+        ow = jnp.einsum("...kn,...n->...k", out_gb, w)
+        sw = jnp.einsum("...kn,...n->...k", share, w)
+        return 0.5 * (
+            jnp.sum(ow * s_tot, axis=-1) + jnp.sum(o_tot * sw, axis=-1)
+        )
+
+    cost = wan.energy_per_gb * bilinear(wpue)
+    energy = wan.energy_per_gb * bilinear(pue)
+    return cost, energy, jnp.sum(o_tot * s_tot, axis=-1)
+
+
+def evacuation_cost(
+    d_masked: Array,
+    d_drop: Array,
+    sizes_gb: Array,
+    wan: WanModel,
+    omega: Array,
+    pue: Array,
+) -> tuple[Array, Array, Array]:
+    """Fused ``transfer_cost(evacuation_plan(...))`` — no (K, N, N) built.
+
+    The evacuation plan is ``plan[k, i, j] = w[k, i, j] * need[k, j]`` with
+    column-normalized no-self source weights; under the endpoint-mean price
+    the source half reduces to the per-destination leave-one-out mean source
+    price ``(src_k·w - src_kj w_j) / (Σ src_k - src_kj)`` — an O(K N)
+    expression. Billing is linear in the plan, so a recovery burst's total
+    is exactly ``evacuation_cost(...) + plan_cost(...)`` (the controller's
+    fast fault path). Same (cost, energy, gb) contract as
+    :func:`transfer_cost`.
+    """
+    need = jnp.maximum(d_drop - d_masked, 0.0) * sizes_gb[:, None]   # (K, N)
+    lost_all = jnp.sum(d_masked, axis=1, keepdims=True) <= 1e-9
+    src = jnp.where(lost_all, d_drop, d_masked)                      # (K, N)
+    src_sum = jnp.sum(src, axis=1, keepdims=True)                    # (K, 1)
+    # The leave-one-out sums are mathematically >= 0 but are computed by
+    # subtraction — clamp before the eps-guarded divide, or a one-hot
+    # ``src`` row cancels to a signed ~ulp and the 1e-12 divisor turns it
+    # into a huge spurious (possibly negative) bill.
+    z_raw = jnp.maximum(src_sum - src, 0.0)                          # (K, N)
+    z = jnp.maximum(z_raw, 1e-12)
+    colsum = z_raw / z                                               # {0..1}
+    wpue = omega * pue
+
+    def half_sum(w: Array) -> Array:
+        src_mean = jnp.maximum(
+            (src @ w)[:, None] - src * w[None, :], 0.0
+        ) / z                                                        # (K, N)
+        return 0.5 * jnp.sum(need * (src_mean + w[None, :] * colsum))
+
+    cost = wan.energy_per_gb * half_sum(wpue)
+    energy = wan.energy_per_gb * half_sum(pue)
+    return cost, energy, jnp.sum(need * colsum)
+
+
+def expected_pull(
+    src: Array, per_site: Array, assume_simplex: bool = False
+) -> Array:
+    """Fused ``src @ link_price_matrix(per_site)`` — no (N, N) built.
+
+    ``pull[k, j] = Σ_i src[k, i] * 0.5 * (w_i + w_j)`` with the diagonal
+    (local hand-off) free — the stage scheduler's expected-WAN-pull term
+    (multiply by ``energy_per_gb`` for $-per-GB). Rank-2 price, so the
+    matvec collapses to two (K,) contractions:
+
+        pull[k, j] = 0.5 * (src_k·w + w_j * Σ_i src_ki) - src[k, j] * w_j
+
+    ``assume_simplex=True`` skips the row-sum reduction (Σ src = 1 by
+    contract — every source mix the scheduler feeds here is a
+    distribution), trimming one kernel from the per-slot hot loop.
+    """
+    dot = src @ per_site                                             # (K,)
+    half_j = (
+        per_site
+        if assume_simplex
+        else per_site * jnp.sum(src, axis=-1)[..., None]
+    )
+    return 0.5 * (dot[..., None] + half_j) - src * per_site
+
+
 def transfer_cost(
     plan_gb: Array, wan: WanModel, omega: Array, pue: Array
 ) -> tuple[Array, Array, Array]:

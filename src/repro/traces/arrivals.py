@@ -69,6 +69,64 @@ def poisson_table(lam, max_value: int) -> np.ndarray:
     return cdf.astype(np.float32)
 
 
+def poisson_pair_from_tables(
+    key_arr: Array,
+    key_mu: Array,
+    arr_cdf: Array,
+    mu_cdf: Array,
+    t_slots: int,
+) -> tuple[Array, Array]:
+    """Draw one run's (arrivals, mu) traces in ONE batched binary search.
+
+    §Perf v6: the per-run Monte-Carlo build used to run two separate
+    ``searchsorted`` binary-search loops (arrivals' K tables, then mu's
+    N·K tables) — two compiled while-loops per run. The tables share one
+    truncation width, so both searches batch into a single vmapped
+    ``searchsorted`` over K + N·K rows. The uniform draws are bitwise the
+    ones :func:`poisson_from_table` would consume (same keys, same
+    shapes), so the realized traces are unchanged — this is purely a
+    launch-count optimization.
+
+    Args:
+        key_arr / key_mu: the PRNG keys the two separate calls would use.
+        arr_cdf: (K, M+1) arrival CDF tables.
+        mu_cdf: (N, K, M+1) service-rate CDF tables (same M as arr_cdf).
+        t_slots: T.
+
+    Returns:
+        (arrivals (T, K), mu (T, N, K)) float32 counts.
+    """
+    k_types = arr_cdf.shape[0]
+    n, k2, m1 = mu_cdf.shape
+    if arr_cdf.shape[-1] != m1:
+        # Different truncation widths (e.g. fleet_256's a_max != mu_max):
+        # pad the narrower CDF with trailing 1.0s — a monotone CDF padded
+        # at 1.0 returns identical searchsorted results for u in [0, 1).
+        m1 = max(arr_cdf.shape[-1], m1)
+        arr_cdf = jnp.pad(
+            arr_cdf, ((0, 0), (0, m1 - arr_cdf.shape[-1])),
+            constant_values=1.0,
+        )
+        mu_cdf = jnp.pad(
+            mu_cdf, ((0, 0), (0, 0), (0, m1 - mu_cdf.shape[-1])),
+            constant_values=1.0,
+        )
+    u_arr = jax.random.uniform(key_arr, (t_slots, k_types))        # (T, K)
+    u_mu = jax.random.uniform(key_mu, (t_slots, n, k2))            # (T, N, K)
+    tables = jnp.concatenate(
+        [arr_cdf.reshape(-1, m1), mu_cdf.reshape(-1, m1)], axis=0
+    )                                                              # (K+NK, M+1)
+    u = jnp.concatenate(
+        [u_arr.reshape(t_slots, -1).T, u_mu.reshape(t_slots, -1).T], axis=0
+    )                                                              # (K+NK, T)
+    out = jax.vmap(lambda c, uu: jnp.searchsorted(c, uu, side="left"))(
+        tables, u
+    )
+    arrivals = out[:k_types].T.astype(jnp.float32)                 # (T, K)
+    mu = out[k_types:].T.reshape(t_slots, n, k2).astype(jnp.float32)
+    return arrivals, mu
+
+
 def poisson_from_table(key: Array, cdf: Array, shape: tuple) -> Array:
     """Exact truncated-Poisson draws via inverse CDF (binary search).
 

@@ -1,0 +1,190 @@
+"""Fused WAN billing: plan_cost / evacuation_cost / expected_pull.
+
+The fast-path bilinear forms must price EXACTLY what the materialized
+(K, N, N) plans price (≤ 1e-5 relative — float reassociation only):
+
+* ``plan_cost(d_old, d_new, ...) == transfer_cost(transfer_plan(...))``
+  — scalars and leading-batch-dim forms;
+* ``evacuation_cost(...) == transfer_cost(evacuation_plan(...))`` —
+  including datasets whose replicas were ALL lost (restore-from-backup);
+* a recovery burst's fused total equals billing the summed plan (pricing
+  is linear in the plan);
+* ``expected_pull(src, w) == src @ link_price_matrix(w)``;
+* a no-move placement bills exactly 0.0 (the W >= T / epoch-0 contract).
+
+The engine-level consequences — staged single-stage bit-exactness with
+``simulate``, the fault path's all-ones-mask bit-exactness against the
+``lax.cond``-gated recovery body, billing == transfer_plan replay — are
+pinned in tests/test_jobs.py and tests/test_fault_placement.py, which run
+against the fused implementations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.fault import drop_site_mask
+from repro.placement.wan import (
+    evacuation_cost,
+    evacuation_plan,
+    expected_pull,
+    link_price_matrix,
+    plan_cost,
+    transfer_cost,
+    transfer_plan,
+    wan_topology,
+)
+
+
+def _case(rng, k, n):
+    d_old = jnp.asarray(rng.dirichlet(np.ones(n), k), jnp.float32)
+    d_new = jnp.asarray(rng.dirichlet(np.ones(n), k), jnp.float32)
+    sizes = jnp.asarray(rng.uniform(0.0, 200.0, k), jnp.float32)
+    omega = jnp.asarray(rng.uniform(5.0, 40.0, n), jnp.float32)
+    pue = jnp.asarray(rng.uniform(1.0, 1.3, n), jnp.float32)
+    wan = wan_topology(
+        jnp.asarray(rng.uniform(0.2, 2.0, n), jnp.float32),
+        jnp.asarray(rng.uniform(0.2, 2.0, n), jnp.float32),
+        energy_per_gb=0.03,
+    )
+    return d_old, d_new, sizes, omega, pue, wan
+
+
+@pytest.mark.parametrize("seed,k,n", [(0, 1, 2), (1, 3, 4), (2, 5, 8),
+                                      (3, 2, 16), (4, 8, 5)])
+def test_plan_cost_matches_materialized(seed, k, n):
+    rng = np.random.default_rng(seed)
+    d_old, d_new, sizes, omega, pue, wan = _case(rng, k, n)
+    if seed % 2:
+        d_new = d_new.at[0].set(d_old[0])        # a no-move row
+        sizes = sizes.at[-1].set(0.0)            # a zero-size dataset
+    ref = transfer_cost(transfer_plan(d_old, d_new, sizes), wan, omega, pue)
+    fused = plan_cost(d_old, d_new, sizes, wan, omega, pue)
+    for r, f in zip(ref, fused):
+        assert float(f) == pytest.approx(float(r), rel=1e-5, abs=1e-5)
+
+
+def test_plan_cost_batched_leading_dims():
+    """The (T, K, N) batched form prices each slice like the 2D form."""
+    rng = np.random.default_rng(7)
+    t, k, n = 5, 3, 4
+    d_old = jnp.asarray(rng.dirichlet(np.ones(n), (t, k)), jnp.float32)
+    d_new = jnp.asarray(rng.dirichlet(np.ones(n), (t, k)), jnp.float32)
+    sizes = jnp.asarray(rng.uniform(0, 100, (t, k)), jnp.float32)
+    omega = jnp.asarray(rng.uniform(5, 40, (t, n)), jnp.float32)
+    pue = jnp.asarray(rng.uniform(1.0, 1.3, (t, n)), jnp.float32)
+    wan = wan_topology(jnp.ones(n), jnp.ones(n))
+    cost, energy, gb = plan_cost(d_old, d_new, sizes, wan, omega, pue)
+    assert cost.shape == (t,)
+    for i in range(t):
+        ci, ei, gi = plan_cost(d_old[i], d_new[i], sizes[i], wan,
+                               omega[i], pue[i])
+        assert float(cost[i]) == pytest.approx(float(ci), rel=1e-6)
+        assert float(energy[i]) == pytest.approx(float(ei), rel=1e-6)
+        assert float(gb[i]) == pytest.approx(float(gi), rel=1e-6)
+
+
+def test_plan_cost_no_move_is_exactly_zero():
+    d = jnp.asarray(np.random.default_rng(0).dirichlet(np.ones(4), 2),
+                    jnp.float32)
+    wan = wan_topology(jnp.ones(4), jnp.ones(4))
+    c, e, gb = plan_cost(d, d, jnp.array([100.0, 50.0]), wan,
+                         jnp.ones(4) * 20.0, jnp.ones(4) * 1.1)
+    assert float(c) == 0.0 and float(e) == 0.0 and float(gb) == 0.0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_evacuation_cost_matches_materialized(seed):
+    rng = np.random.default_rng(100 + seed)
+    k, n = 3, 5
+    d, _, sizes, omega, pue, wan = _case(rng, k, n)
+    alive = jnp.asarray((rng.random(n) > 0.4).astype(np.float32))
+    if float(alive.sum()) == 0:
+        alive = alive.at[0].set(1.0)
+    if seed == 2:
+        # A dataset whose replicas all sat on dead sites: the
+        # restore-from-backup source mix (lost_all branch).
+        d = d.at[0].set(jnp.where(alive > 0.5, 0.0, d[0]))
+        d = d.at[0].set(d[0] / jnp.maximum(d[0].sum(), 1e-9))
+    _, d_masked, d_drop, _ = drop_site_mask(jnp.zeros((n, k)), d, alive)
+    ref = transfer_cost(
+        evacuation_plan(d_masked, d_drop, sizes), wan, omega, pue
+    )
+    fused = evacuation_cost(d_masked, d_drop, sizes, wan, omega, pue)
+    for r, f in zip(ref, fused):
+        assert float(f) == pytest.approx(float(r), rel=2e-5, abs=1e-4)
+
+
+def test_evacuation_cost_one_hot_source_no_cancellation_blowup():
+    """A survivor layout concentrated (near-)entirely at one site is the
+    catastrophic-cancellation case of the leave-one-out source mean: the
+    fused bill must stay tiny and non-negative, like the materialized one
+    (caught by the slow chaos sweep before the clamp landed)."""
+    n, k = 4, 2
+    wan = wan_topology(jnp.ones(n), jnp.ones(n))
+    omega = jnp.asarray([20.0, 35.0, 10.0, 25.0])
+    pue = jnp.asarray([1.1, 1.2, 1.05, 1.15])
+    sizes = jnp.asarray([100.0, 80.0])
+    # One-hot + ulp-scale residue holdings; dead site 1 forces need > 0.
+    d = jnp.asarray([[1.0 - 3e-8, 1e-8, 1e-8, 1e-8],
+                     [0.0, 1.0, 0.0, 0.0]], jnp.float32)
+    alive = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    _, d_masked, d_drop, _ = drop_site_mask(jnp.zeros((n, k)), d, alive)
+    ref = transfer_cost(
+        evacuation_plan(d_masked, d_drop, sizes), wan, omega, pue
+    )
+    fused = evacuation_cost(d_masked, d_drop, sizes, wan, omega, pue)
+    for r, f in zip(ref, fused):
+        assert float(f) >= 0.0
+        assert float(f) == pytest.approx(float(r), rel=2e-5, abs=1e-3)
+
+
+def test_recovery_burst_fused_sum_matches_combined_plan():
+    """cost(evac + move) == cost(evac) + cost(move): pricing is linear in
+    the plan, so the controller's fused fault-path total equals billing
+    the summed (K, N, N) burst as one event (what the pre-fused
+    controller did)."""
+    rng = np.random.default_rng(11)
+    k, n = 2, 6
+    d, d_tgt, sizes, omega, pue, wan = _case(rng, k, n)
+    alive = jnp.ones(n).at[2].set(0.0)
+    _, d_masked, d_drop, _ = drop_site_mask(jnp.zeros((n, k)), d, alive)
+    d_rec = d_drop + 0.5 * (d_tgt * alive[None, :] - d_drop)
+    d_rec = d_rec / jnp.sum(d_rec, axis=1, keepdims=True)
+    combined = (evacuation_plan(d_masked, d_drop, sizes)
+                + transfer_plan(d_drop, d_rec, sizes))
+    ref_c, _, ref_g = transfer_cost(combined, wan, omega, pue)
+    ev_c, _, ev_g = evacuation_cost(d_masked, d_drop, sizes, wan, omega, pue)
+    mv_c, _, mv_g = plan_cost(d_drop, d_rec, sizes, wan, omega, pue)
+    assert float(ev_c + mv_c) == pytest.approx(float(ref_c), rel=1e-5)
+    assert float(ev_g + mv_g) == pytest.approx(float(ref_g), rel=1e-5)
+
+
+@pytest.mark.parametrize("seed,k,n", [(0, 1, 3), (1, 4, 4), (2, 3, 9)])
+def test_expected_pull_matches_price_matrix(seed, k, n):
+    rng = np.random.default_rng(200 + seed)
+    src = jnp.asarray(rng.dirichlet(np.ones(n), k), jnp.float32)
+    w = jnp.asarray(rng.uniform(5, 50, n), jnp.float32)
+    ref = src @ link_price_matrix(w)
+    np.testing.assert_allclose(
+        np.asarray(expected_pull(src, w)), np.asarray(ref),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_fused_billing_is_jit_and_vmap_safe():
+    """The hot-loop forms must survive jit + vmap (the engines' usage)."""
+    rng = np.random.default_rng(3)
+    d_old, d_new, sizes, omega, pue, wan = _case(rng, 2, 4)
+
+    @jax.jit
+    def run(keys):
+        def one(_):
+            return plan_cost(d_old, d_new, sizes, wan, omega, pue)[0]
+        return jax.vmap(one)(keys)
+
+    out = run(jnp.arange(3))
+    assert out.shape == (3,)
+    ref = transfer_cost(transfer_plan(d_old, d_new, sizes), wan, omega, pue)
+    np.testing.assert_allclose(np.asarray(out), float(ref[0]), rtol=1e-5)

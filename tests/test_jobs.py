@@ -285,6 +285,29 @@ def test_staged_composes_with_simulate_placed(staged_setup):
     assert totals["adaptive"] < totals["static"], totals
 
 
+def test_returns_flow_export_matches_engine_recursion(staged_setup):
+    """A returns_flow policy's exported inflows reproduce the engine's own
+    within-slot flow recursion exactly: stripping the export (forcing the
+    engine to re-derive the chain) changes nothing."""
+    cfg, template, dag, wan, _ = staged_setup
+    aware = make_staged_policy(dag, wan)
+
+    def stripped(key, q, arrivals, mu, e, aux, scalar):
+        return aware(key, q, arrivals, mu, e, aux, scalar)[0]
+
+    stripped.staged = True
+    stripped.consumes_key = False
+    key = jax.random.key(4)
+    o_exp = simulate_staged(template, dag, wan, aware, key, scalar=cfg.v)
+    o_rec = simulate_staged(template, dag, wan, stripped, key, scalar=cfg.v)
+    for field in o_exp._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(o_exp, field)),
+            np.asarray(getattr(o_rec, field)),
+            rtol=1e-6, err_msg=field,
+        )
+
+
 def test_staged_many_shapes_and_determinism(staged_setup):
     cfg, template, dag, wan, build = staged_setup
     pol = make_staged_policy(dag, wan)

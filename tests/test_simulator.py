@@ -70,6 +70,39 @@ def test_paper_claims_reduced(builder):
     assert res["greedy"]["time_avg_backlog"] > res["gmsa100"]["time_avg_backlog"]
 
 
+def test_unrolled_threefry_streams_bitwise_identical():
+    """The CPU threefry lowering swap (repro.core.prngfast) must not move
+    a single random bit: draws under the default rolled lowering (opt-out
+    subprocess) equal this process's unrolled draws exactly."""
+    import os
+    import subprocess
+    import sys
+
+    from repro.core.prngfast import _INSTALLED
+
+    if not _INSTALLED:
+        pytest.skip("unrolled threefry not installed (non-CPU or opted out)")
+    probe = (
+        "import jax, numpy as np\n"
+        "import repro  # noqa: F401  (opt-out env below keeps it rolled)\n"
+        "k = jax.random.key(7)\n"
+        "u = np.asarray(jax.random.uniform(k, (64, 5)))\n"
+        "s = np.asarray(jax.random.key_data(jax.random.split(k, 3)))\n"
+        "print(u.tobytes().hex()); print(s.tobytes().hex())\n"
+    )
+    env = dict(os.environ, REPRO_ROLLED_THREEFRY="1", JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = os.pathsep.join(sys.path)
+    out = subprocess.run(
+        [sys.executable, "-c", probe], env=env,
+        capture_output=True, text=True, check=True,
+    ).stdout.splitlines()
+    k = jax.random.key(7)
+    u = np.asarray(jax.random.uniform(k, (64, 5)))
+    s = np.asarray(jax.random.key_data(jax.random.split(k, 3)))
+    assert out[0] == u.tobytes().hex()
+    assert out[1] == s.tobytes().hex()
+
+
 def test_elastic_drop_site(builder):
     """Losing a DC mid-horizon: system re-stabilizes on survivors."""
     from repro.checkpoint.fault import drop_site

@@ -1,0 +1,134 @@
+"""One-launch sweep grids (repro.core.sweep) + the traced move budget.
+
+The contract: a vmapped grid must reproduce the per-point launches —
+same keys, same traces, same numbers — it only changes how many device
+programs run.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.facebook_4dc import PaperSimConfig, make_sim_builder
+from repro.core.baselines import static_placement_rule
+from repro.core.gmsa import dispatch_fn, gmsa_policy
+from repro.core.simulator import simulate, simulate_many
+from repro.core.sweep import simulate_sweep, sweep_grid, sweep_placed_budgets
+from repro.placement import (
+    PlacementConfig,
+    make_adaptive_rule,
+    simulate_placed_many,
+)
+from repro.traces.bandwidth import bandwidth_draw
+from repro.traces.drift import ingest_drift_trace
+
+V_POINTS = (0.01, 1.0, 100.0)
+
+
+@pytest.fixture(scope="module")
+def paper_setup():
+    cfg = PaperSimConfig()
+    template, build = make_sim_builder(cfg)
+    root = jax.random.key(cfg.trace_seed)
+    up, down = bandwidth_draw(jax.random.split(root, 6)[2], cfg.n_sites)
+    return cfg, template, build, up, down
+
+
+def test_simulate_sweep_matches_per_point(paper_setup):
+    cfg, template, _, _, _ = paper_setup
+    key = jax.random.key(5)
+    grid = simulate_sweep(template, gmsa_policy, key, V_POINTS)
+    assert grid.cost.shape == (len(V_POINTS), cfg.t_slots)
+    for i, v in enumerate(V_POINTS):
+        per = simulate(template, gmsa_policy, key, v)
+        np.testing.assert_allclose(
+            np.asarray(grid.cost[i]), np.asarray(per.cost), rtol=1e-6
+        )
+        np.testing.assert_array_equal(
+            np.asarray(grid.f_trace[i]), np.asarray(per.f_trace)
+        )
+
+
+def test_sweep_grid_matches_per_point_monte_carlo(paper_setup):
+    cfg, _, build, _, _ = paper_setup
+    key = jax.random.key(43)
+    n_runs = 8
+    grid = sweep_grid(build, gmsa_policy, key, n_runs, V_POINTS)
+    assert grid.cost.shape == (len(V_POINTS), n_runs, cfg.t_slots)
+    for i, v in enumerate(V_POINTS):
+        per = simulate_many(build, gmsa_policy, key, n_runs, scalar=v)
+        np.testing.assert_allclose(
+            np.asarray(grid.cost[i]), np.asarray(per.cost), rtol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(grid.backlog_avg[i]), np.asarray(per.backlog_avg),
+            rtol=1e-6,
+        )
+
+
+def test_sweep_grid_v_monotonicity(paper_setup):
+    """The Fig.-6 structure survives the one-launch migration: cost falls
+    with V, backlog rises."""
+    _, _, build, _, _ = paper_setup
+    grid = sweep_grid(build, gmsa_policy, jax.random.key(43), 16, V_POINTS)
+    costs = [float(grid.cost[i].mean()) for i in range(len(V_POINTS))]
+    backlogs = [float(grid.backlog_avg[i].mean())
+                for i in range(len(V_POINTS))]
+    assert costs[0] >= costs[1] >= costs[2] * 0.99
+    assert backlogs[-1] >= backlogs[0]
+
+
+def test_sweep_placed_budgets_matches_per_budget(paper_setup):
+    cfg, _, build, up, down = paper_setup
+    w = 48
+    n_epochs = cfg.t_slots // w
+    ing = ingest_drift_trace(jax.random.key(7), n_epochs, cfg.k_types,
+                             cfg.n_sites)
+    pcfg = PlacementConfig(
+        epoch_slots=w, growth=0.25,
+        manager_share=cfg.manager_share, map_share=cfg.map_share,
+    )
+    key = jax.random.key(3)
+    pol = dispatch_fn(cfg.v)
+    rule = make_adaptive_rule(up)
+    budgets = (0.25, 1.0)
+    grid = sweep_placed_budgets(
+        build, up, down, pol, rule, key, 4, pcfg, budgets, ingest=ing
+    )
+    assert grid.cost.shape == (len(budgets), 4, cfg.t_slots)
+    for i, b in enumerate(budgets):
+        per = simulate_placed_many(
+            build, up, down, pol, rule, key, 4, pcfg, ingest=ing,
+            move_budget=jnp.float32(b),
+        )
+        np.testing.assert_allclose(
+            np.asarray(grid.cost[i]), np.asarray(per.cost), rtol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(grid.wan_gb[i]), np.asarray(per.wan_gb), rtol=1e-5
+        )
+    # A bigger correction step chases the drift with more WAN churn.
+    assert (float(grid.wan_gb[1].sum()) > float(grid.wan_gb[0].sum()))
+
+
+def test_move_budget_override_none_matches_config(paper_setup):
+    """move_budget=None (static config) == passing the same value traced,
+    and the None path keeps the pre-override W >= T bit-exactness (pinned
+    separately in test_placement.py)."""
+    cfg, _, build, up, down = paper_setup
+    pcfg = PlacementConfig(
+        epoch_slots=48, move_budget=0.5,
+        manager_share=cfg.manager_share, map_share=cfg.map_share,
+    )
+    key = jax.random.key(9)
+    pol = dispatch_fn(1.0)
+    rule = make_adaptive_rule(up)
+    a = simulate_placed_many(build, up, down, pol, rule, key, 4, pcfg)
+    b = simulate_placed_many(build, up, down, pol, rule, key, 4, pcfg,
+                             move_budget=jnp.float32(0.5))
+    for field in a._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(a, field)), np.asarray(getattr(b, field)),
+            rtol=1e-6, err_msg=field,
+        )
