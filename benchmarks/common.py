@@ -41,7 +41,8 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3):
     return result, dt * 1e6
 
 
-def timed_compile_sweep(thunk, n_runs: int, iters: int = 4):
+def timed_compile_sweep(thunk, n_runs: int, iters: int = 4,
+                        trace_dir: str | None = None):
     """Time a jit-compiled Monte-Carlo sweep, isolating compilation.
 
     The first call pays compilation plus one full sweep; steady state is
@@ -50,7 +51,14 @@ def timed_compile_sweep(thunk, n_runs: int, iters: int = 4):
     scheduler interference, not the program (a single call, which this
     harness used to take, is hostage to that noise). Subtracting isolates
     the one-time compile. Returns ``(outs, us_per_run, compile_us)``.
+
+    ``trace_dir`` wraps the steady-state calls (compilation excluded) in
+    ``jax.profiler.trace`` — open the result with TensorBoard's profile
+    plugin or Perfetto. Timings taken under the profiler carry its
+    overhead; use them for the op-level breakdown, not the trajectory.
     """
+    import contextlib
+
     import jax
 
     t0 = time.perf_counter()
@@ -58,12 +66,15 @@ def timed_compile_sweep(thunk, n_runs: int, iters: int = 4):
     jax.block_until_ready(outs)
     first_call_us = (time.perf_counter() - t0) * 1e6
 
+    prof = (jax.profiler.trace(trace_dir) if trace_dir
+            else contextlib.nullcontext())
     steady = []
-    for _ in range(max(iters, 1)):
-        t0 = time.perf_counter()
-        outs = thunk()
-        jax.block_until_ready(outs)
-        steady.append((time.perf_counter() - t0) * 1e6)
+    with prof:
+        for _ in range(max(iters, 1)):
+            t0 = time.perf_counter()
+            outs = thunk()
+            jax.block_until_ready(outs)
+            steady.append((time.perf_counter() - t0) * 1e6)
     us_per_run = min(steady) / n_runs
     compile_us = max(first_call_us - n_runs * us_per_run, 0.0)
     return outs, us_per_run, compile_us
@@ -96,6 +107,28 @@ def emit(name: str, us_per_call: float, derived: str):
     })
 
 
+def _provenance() -> dict:
+    """Stamp for a BENCH_sim.json entry: git SHA, jax version, backend."""
+    import subprocess
+
+    import jax
+
+    sha = None
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=pathlib.Path(__file__).resolve().parent,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return {
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+    }
+
+
 def write_bench_json(label: str | None = None):
     """Append this process's emitted records to :data:`BENCH_JSON`.
 
@@ -103,6 +136,13 @@ def write_bench_json(label: str | None = None):
     module's ``__main__`` guard when run standalone (the CI smoke step),
     so the perf trajectory accrues either way. No-op when nothing was
     emitted.
+
+    Each entry is stamped with provenance (git SHA, jax version, backend)
+    so a trajectory diff can tell a regression from an environment change.
+    Re-runs that produce a ``derived`` payload identical to the previous
+    entry with the same label are SKIPPED — ``us_per_call`` is timing
+    noise, so without the dedup every CI retry would grow the file with
+    rows that say nothing new.
     """
     if not _RECORDS:
         return
@@ -112,10 +152,21 @@ def write_bench_json(label: str | None = None):
             history = json.loads(BENCH_JSON.read_text())
         except json.JSONDecodeError:
             history = []
+    payload = [(r["name"], r["derived"]) for r in _RECORDS]
+    for prev in reversed(history):
+        if prev.get("label") != label:
+            continue
+        prev_payload = [
+            (b.get("name"), b.get("derived")) for b in prev.get("benches", [])
+        ]
+        if prev_payload == payload:
+            return                      # identical derived results: no news
+        break
     history.append({
         "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "label": label,
         "n_runs_env": N_RUNS,
+        **_provenance(),
         "benches": list(_RECORDS),
     })
     BENCH_JSON.write_text(json.dumps(history, indent=1) + "\n")

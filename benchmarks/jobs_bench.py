@@ -22,6 +22,10 @@ the WAN bill and intermediate GB, backlog, jobs completed, and wall-clock
 per Monte-Carlo run for the jit-compiled engine (compilation isolated).
 
 ``--quick`` runs a 4-run smoke version (the tier-1 CI step).
+``--telemetry PATH`` additionally runs the aware arm once at TRACE level
+and writes the flight record to PATH as JSONL (rendered/verified by
+``python -m repro.telemetry.report PATH --check`` — the CI round-trip).
+``--trace-dir DIR`` profiles the timed sweeps with ``jax.profiler``.
 """
 
 from __future__ import annotations
@@ -38,18 +42,35 @@ from repro.configs.facebook_4dc_stages import (
 from repro.core.gmsa import gmsa_policy
 from repro.jobs import (
     make_staged_policy,
+    simulate_staged,
     simulate_staged_many,
     stage_oblivious,
     summarize_staged,
 )
 
 
-def _timed_sweep(build, dag, wan, pol, key, n_runs, v):
+def _timed_sweep(build, dag, wan, pol, key, n_runs, v, trace_dir=None):
     return timed_compile_sweep(
         lambda: simulate_staged_many(build, dag, wan, pol, key, n_runs,
                                      scalar=v),
         n_runs,
+        trace_dir=trace_dir,
     )
+
+
+def _write_flight_record(path, template, dag, wan, pol, key, v):
+    """One aware-arm run at TRACE level -> JSONL flight record at ``path``."""
+    from repro.telemetry import TRACE, TelemetryConfig, collect_records, write_jsonl
+
+    tcfg = TelemetryConfig(level=TRACE)
+    outs, frame = simulate_staged(template, dag, wan, pol, key, scalar=v,
+                                  telemetry=tcfg)
+    records = collect_records(
+        outs, frame, cfg=tcfg, summary=summarize_staged(outs),
+        meta={"bench": "jobs_bench", "arm": "aware"},
+    )
+    write_jsonl(records, path)
+    print(f"# flight record: {len(records)} records -> {path}", flush=True)
 
 
 def main(argv=None):
@@ -57,6 +78,15 @@ def main(argv=None):
     parser.add_argument(
         "--quick", action="store_true",
         help="4-run smoke version (CI tier-1 step)",
+    )
+    parser.add_argument(
+        "--telemetry", default=None, metavar="PATH",
+        help="write a TRACE-level JSONL flight record of one aware-arm "
+             "run to PATH",
+    )
+    parser.add_argument(
+        "--trace-dir", default=None, metavar="DIR",
+        help="profile the timed sweeps with jax.profiler.trace(DIR)",
     )
     args, _ = parser.parse_known_args(argv)
 
@@ -71,7 +101,8 @@ def main(argv=None):
         ("aware", make_staged_policy(dag, wan)),
     ]:
         outs, us_per_run, compile_us = _timed_sweep(
-            build, dag, wan, pol, key, n_runs, cfg.v
+            build, dag, wan, pol, key, n_runs, cfg.v,
+            trace_dir=args.trace_dir,
         )
         s = summarize_staged(outs)
         results[name] = s
@@ -99,6 +130,10 @@ def main(argv=None):
     assert results["aware"]["total_wan_gb"] > 0.0, (
         "the multi-stage scenario must report intermediate WAN GB"
     )
+
+    if args.telemetry:
+        _write_flight_record(args.telemetry, template, dag, wan,
+                             make_staged_policy(dag, wan), key, cfg.v)
 
 
 if __name__ == "__main__":

@@ -24,8 +24,15 @@ from repro.core.gmsa import dispatch_fn
 from repro.placement import (
     PlacementConfig,
     make_adaptive_rule,
+    simulate_placed,
     simulate_placed_many,
     summarize_placed,
+)
+from repro.telemetry import (
+    TRACE,
+    TelemetryConfig,
+    collect_records,
+    render_timeline,
 )
 from repro.traces.bandwidth import bandwidth_draw
 from repro.traces.drift import dataset_growth_trace, ingest_drift_trace
@@ -96,19 +103,29 @@ def main():
         pcfg, ingest=ingest, sizes_gb=sizes, alive=alive,
     )
     s = summarize_placed(outs)
-    rc = np.asarray(outs.recovery_cost).mean(axis=0)       # (T,)
     f = np.asarray(outs.f_trace)
-    backlog = np.asarray(outs.backlog_avg).mean(axis=0)
-    print(f"recovery epoch fired at slot {int(np.nonzero(rc)[0][0])}: "
-          f"evacuated {s['total_recovery_gb']:.0f} GB, "
-          f"${s['time_avg_recovery_cost'] * cfg.t_slots:.1f} emergency WAN bill")
     print(f"dispatch mass to the dead site after the loss: "
           f"{float(np.abs(f[:, t_die:, dead_site]).max()):.1f}")
-    print(f"backlog around the loss (mean/run): "
-          f"pre {backlog[t_die - 12:t_die].mean():.2f}, "
-          f"death slot {backlog[t_die]:.2f}, "
-          f"+1 h {backlog[t_die + 12]:.2f}")
     print(f"total cost with recovery: {s['time_avg_total_cost']:.1f} $/slot")
+
+    # The recovery timeline comes straight off the flight recorder: one
+    # TRACE-level run, and the death edge (evacuation GB/$ + time-to-SLO),
+    # the epoch churn and the ingest redirects are in the event stream —
+    # no digging through PlacedOutputs fields.
+    tcfg = TelemetryConfig(level=TRACE)
+    outs1, frame = simulate_placed(
+        build(jax.random.split(key, 2)[0]), up, down, pol,
+        make_adaptive_rule(up, temp=2.0), key, pcfg,
+        ingest=ingest, sizes_gb=sizes, alive=alive, telemetry=tcfg,
+    )
+    records = collect_records(
+        outs1, frame, cfg=tcfg, summary=summarize_placed(outs1),
+    )
+    print("\nrecovery timeline (one TRACE run, event codes: recovery/"
+          "epoch/ingest_redirect):")
+    print(render_timeline(
+        records, codes={"recovery", "epoch", "ingest_redirect"},
+    ))
     print("\nThe dead site's backlog re-enters as an arrival burst, its data")
     print("re-replicates over the survivors, and GMSA never dispatches to a")
     print("dead DC again — the chaos path of the same compiled controller.")

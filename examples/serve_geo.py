@@ -36,6 +36,17 @@ def main():
     share = out["dispatch"].mean(axis=0).sum(axis=1)
     print(f"dispatch share per pod: {np.round(share / share.sum(), 3)}")
 
+    # Per-slot timeline straight from the engine's history records —
+    # manager choice per class, pod queue depths, IT Joules per class.
+    print("\nslot timeline (manager pod per class | pod queue depths | J):")
+    for h in out["history"]:
+        choices = " ".join(
+            f"{c}->pod{p}" for c, p in zip(classes, h["choice"])
+        )
+        depths = " ".join(f"{d:5.1f}" for d in h["q_pod"])
+        joules = " ".join(f"{j:6.1f}" for j in h["energy_j"])
+        print(f"  t={h['t']:>2}  {choices}  | q [{depths}] | E [{joules}]")
+
     print("\n=== V=100 (cost-greedy) — dispatch only ===")
     engine = build_engine(classes, slots, v=100.0, arrival=5.0)
     out100 = engine.run(execute_real=False)

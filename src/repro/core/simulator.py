@@ -41,6 +41,9 @@ from jax import Array
 
 from repro.core.energy import manager_energy, manager_energy_cost
 from repro.core.queues import queue_step
+from repro.telemetry.config import TelemetryConfig
+from repro.telemetry.config import enabled as _tel_enabled
+from repro.telemetry.ring import TelemetryFrame, ring_init
 
 
 class SimInputs(NamedTuple):
@@ -141,11 +144,25 @@ def slot_step(
     return q_next, (cost, energy, jnp.sum(q_next), jnp.mean(q_next), f)
 
 
-@functools.partial(jax.jit, static_argnames=("policy",))
+@functools.partial(jax.jit, static_argnames=("policy", "telemetry"))
 def simulate(
-    inputs: SimInputs, policy: PolicyFn, key: Array, scalar: float | Array = 0.0
-) -> SimOutputs:
-    """Run one trace-driven simulation under ``policy``."""
+    inputs: SimInputs,
+    policy: PolicyFn,
+    key: Array,
+    scalar: float | Array = 0.0,
+    telemetry: TelemetryConfig | None = None,
+) -> SimOutputs | tuple[SimOutputs, TelemetryFrame]:
+    """Run one trace-driven simulation under ``policy``.
+
+    ``telemetry`` is **static**: ``None``/``OFF`` (default) traces to the
+    byte-identical jaxpr of the pre-telemetry engine (pinned in tests);
+    SUMMARY/TRACE adds a per-slot per-site backlog stream as an extra
+    stacked scan output and returns ``(outputs, TelemetryFrame)`` —
+    manager-switch events are derived post-scan from ``f_trace`` by
+    :func:`repro.telemetry.collect.switch_events`, so this engine records
+    nothing inside the scan body beyond the metric stream.
+    """
+    tel_on = _tel_enabled(telemetry)
     t_slots, k_types = inputs.arrivals.shape
     n = inputs.mu.shape[1]
     q0 = jnp.zeros((n, k_types), jnp.float32)
@@ -198,6 +215,8 @@ def simulate(
         else:
             arrivals, mu, e_cost, e_raw, f = xs
         q_next, out = slot_step(q, f, arrivals, mu, e_cost, e_raw)
+        if tel_on:
+            out = out + (jnp.sum(q_next, axis=-1),)       # (N,) per-site q
         return ((q_next, key) if keyed else q_next), out
 
     xs = (inputs.arrivals, inputs.mu, e_cost_all, e_raw_all)
@@ -208,33 +227,44 @@ def simulate(
     if wants_wpue:
         xs = xs + (wpue_all,)
     carry0 = (q0, key) if keyed else q0
-    final_carry, (cost, energy, btot, bavg, f_trace) = jax.lax.scan(
-        slot, carry0, xs
-    )
+    final_carry, scan_outs = jax.lax.scan(slot, carry0, xs)
+    if tel_on:
+        (cost, energy, btot, bavg, f_trace, q_site) = scan_outs
+    else:
+        (cost, energy, btot, bavg, f_trace) = scan_outs
     q_final = final_carry[0] if keyed else final_carry
-    return SimOutputs(cost, energy, btot, bavg, q_final, f_trace)
+    outs = SimOutputs(cost, energy, btot, bavg, q_final, f_trace)
+    if tel_on:
+        return outs, TelemetryFrame(
+            ring=ring_init(1), metrics={"q_site": q_site}
+        )
+    return outs
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "build_inputs", "n_runs"))
+@functools.partial(
+    jax.jit, static_argnames=("policy", "build_inputs", "n_runs", "telemetry")
+)
 def simulate_many(
     build_inputs: Callable[[Array], SimInputs],
     policy: PolicyFn,
     key: Array,
     n_runs: int,
     scalar: float | Array = 0.0,
+    telemetry: TelemetryConfig | None = None,
 ) -> SimOutputs:
     """Monte-Carlo replication: fresh traces + fresh policy randomness per run.
 
     ``build_inputs(key) -> SimInputs`` regenerates the stochastic traces
     (arrivals, service rates) for each run; deterministic traces (prices,
     PUE, ratios) are closed over and shared. Outputs are stacked on a
-    leading (n_runs,) axis.
+    leading (n_runs,) axis (telemetry frames too, when enabled).
     """
     keys = jax.random.split(key, n_runs)
 
     def one(run_key):
         k_build, k_sim = jax.random.split(run_key)
-        return simulate(build_inputs(k_build), policy, k_sim, scalar)
+        return simulate(build_inputs(k_build), policy, k_sim, scalar,
+                        telemetry)
 
     return jax.vmap(one)(keys)
 

@@ -57,6 +57,9 @@ from repro.core.simulator import (
 from repro.jobs.dag import StageDag
 from repro.jobs.scheduler import stage_oblivious, stage_service_rates_all
 from repro.placement.wan import WanModel, plan_cost
+from repro.telemetry.config import TelemetryConfig
+from repro.telemetry.config import enabled as _tel_enabled
+from repro.telemetry.ring import TelemetryFrame, ring_init
 
 #: Zero-flow guard for the source-mix normalization — the same epsilon
 #: :func:`repro.jobs.scheduler.flow_step` uses, so the engine's replayed
@@ -79,7 +82,7 @@ class StagedOutputs(NamedTuple):
     completed: Array      # (T, K) jobs finishing their last stage per slot
 
 
-@functools.partial(jax.jit, static_argnames=("policy",))
+@functools.partial(jax.jit, static_argnames=("policy", "telemetry"))
 def simulate_staged(
     inputs: SimInputs,
     dag: StageDag,
@@ -87,7 +90,8 @@ def simulate_staged(
     policy: PolicyFn,
     key: Array,
     scalar: float | Array = 0.0,
-) -> StagedOutputs:
+    telemetry: TelemetryConfig | None = None,
+) -> StagedOutputs | tuple[StagedOutputs, TelemetryFrame]:
     """Run one stage-structured trace-driven simulation under ``policy``.
 
     Args:
@@ -102,7 +106,17 @@ def simulate_staged(
         key: PRNG key (consumed exactly as ``simulate`` does, on both the
             precomputed and the carried-key policy paths).
         scalar: traced control parameter forwarded to the policy (GMSA's V).
+        telemetry: **static** flight-recorder config. ``None``/``OFF``
+            (default) keeps the jaxpr byte-identical to the pre-telemetry
+            engine. Enabled levels return ``(outputs, TelemetryFrame)``
+            whose metrics are per-(slot, stage) streams — backlog and the
+            WAN bill split by stage. Everything is derived post-scan from
+            the stacked ``(f, acc, ins)`` outputs the fast path already
+            produces (the PR-4 structure), so TRACE adds ZERO ops to the
+            scan body here; the per-stage billing runs ``plan_cost``
+            batched once more over ``(T, S)`` without the type-axis fold.
     """
+    tel_on = _tel_enabled(telemetry)
     t_slots, k_types = inputs.arrivals.shape
     n = inputs.mu.shape[1]
     s_max = dag.s_max
@@ -269,15 +283,40 @@ def simulate_staged(
         vol_all.reshape(t_slots, s_max * k_types),
         wan, inputs.omega, inputs.pue,
     )                                                              # (T,) each
-    return StagedOutputs(
+    outs = StagedOutputs(
         cost=cost, energy=energy, backlog_total=btot, backlog_avg=bavg,
         q_final=q_final, f_trace=f_trace,
         wan_cost=wan_c, wan_energy=wan_e, wan_gb=wan_gb,
         completed=completed,
     )
+    if tel_on:
+        # Per-stage streams, recovered from the same stacked (f, acc, ins)
+        # outputs — the per-(slot, stage) WAN split is a SECOND batched
+        # plan_cost call over (T, S) (stages as the leading batch dim, the
+        # type axis folded as usual), leaving the fused OFF-path bill and
+        # its reduction order untouched.
+        stage_backlog = jnp.sum(q_next_all, axis=(1, 2))           # (T, S)
+        sw_c, _, sw_gb = plan_cost(
+            src_all.transpose(1, 0, 2, 3),                         # (S,T,K,N)
+            dst_all.transpose(1, 0, 2, 3),
+            vol_all.transpose(1, 0, 2),                            # (S,T,K)
+            wan, inputs.omega, inputs.pue,
+        )                                                          # (S, T)
+        return outs, TelemetryFrame(
+            ring=ring_init(1),
+            metrics={
+                "q_site": jnp.sum(q_next_all, axis=(2, 3)),        # (T, N)
+                "stage_backlog": stage_backlog,                    # (T, S)
+                "stage_wan_cost": sw_c.T,                          # (T, S)
+                "stage_wan_gb": sw_gb.T,                           # (T, S)
+            },
+        )
+    return outs
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "build_inputs", "n_runs"))
+@functools.partial(
+    jax.jit, static_argnames=("policy", "build_inputs", "n_runs", "telemetry")
+)
 def simulate_staged_many(
     build_inputs: Callable[[Array], SimInputs],
     dag: StageDag,
@@ -286,19 +325,21 @@ def simulate_staged_many(
     key: Array,
     n_runs: int,
     scalar: float | Array = 0.0,
+    telemetry: TelemetryConfig | None = None,
 ) -> StagedOutputs:
     """Monte-Carlo replication of :func:`simulate_staged` (vmap over keys).
 
     Mirrors ``simulate_many``: fresh stochastic traces + policy randomness
     per run, deterministic traces (prices, PUE, the dag, the WAN model)
-    shared. One compilation serves every run.
+    shared. One compilation serves every run; telemetry frames (when
+    enabled) stack on the leading runs axis like every other output.
     """
     keys = jax.random.split(key, n_runs)
 
     def one(run_key):
         k_build, k_sim = jax.random.split(run_key)
         return simulate_staged(
-            build_inputs(k_build), dag, wan, policy, k_sim, scalar
+            build_inputs(k_build), dag, wan, policy, k_sim, scalar, telemetry
         )
 
     return jax.vmap(one)(keys)

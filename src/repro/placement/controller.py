@@ -57,6 +57,17 @@ from repro.core.simulator import (
     slot_step,
 )
 from repro.placement.replica import sync_cost as replica_sync_cost
+from repro.telemetry.config import TelemetryConfig
+from repro.telemetry.config import enabled as _tel_enabled
+from repro.telemetry.config import tracing as _tel_tracing
+from repro.telemetry.ring import (
+    EV_EPOCH,
+    EV_INGEST_REDIRECT,
+    EV_RECOVERY,
+    TelemetryFrame,
+    ring_init,
+    ring_push,
+)
 from repro.traces.datasets import io_slowdown_from_bandwidth
 from repro.placement.wan import (
     DEFAULT_ENERGY_PER_GB,
@@ -181,7 +192,9 @@ class PlacedOutputs(NamedTuple):
                            # unless cfg.io_coupling)
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "rule", "cfg"))
+@functools.partial(
+    jax.jit, static_argnames=("policy", "rule", "cfg", "telemetry")
+)
 def simulate_placed(
     inputs: SimInputs,
     up: Array,
@@ -195,7 +208,8 @@ def simulate_placed(
     sizes_gb: Array | None = None,
     alive: Array | None = None,
     move_budget: Array | None = None,
-) -> PlacedOutputs:
+    telemetry: TelemetryConfig | None = None,
+) -> PlacedOutputs | tuple[PlacedOutputs, TelemetryFrame]:
     """Run the two-timescale controller over one trace.
 
     Args:
@@ -230,7 +244,19 @@ def simulate_placed(
             epoch structure stays static, the step size becomes data).
             ``None`` (default) uses the static config value, bit-exact
             with the pre-override behavior.
+        telemetry: **static** flight-recorder config. ``None``/``OFF``
+            (default) keeps the jaxpr byte-identical to the pre-telemetry
+            controller. SUMMARY adds a per-slot per-site backlog stream
+            (extra stacked scan output); TRACE additionally threads a
+            fixed-capacity event ring through both scan levels, recording
+            every epoch boundary (WAN GB/$, sync $, churn, move-budget
+            use), every off-schedule recovery epoch (evacuated GB, $,
+            dead sites — pushed right next to the ``lax.cond`` death
+            edge) and every dead-site ingest redirect. Enabled levels
+            return ``(outputs, TelemetryFrame)``.
     """
+    tel_on = _tel_enabled(telemetry)
+    tel_trace = _tel_tracing(telemetry)
     t_slots, k_types = inputs.arrivals.shape
     n = inputs.mu.shape[1]
     if inputs.data_dist.ndim != 2 or inputs.r.ndim != 3:
@@ -299,11 +325,17 @@ def simulate_placed(
         )
 
     def epoch(carry, xs):
-        q, key, d = carry
+        if tel_trace:
+            q, key, d, ring = carry
+        else:
+            q, key, d = carry
         rest = xs[7:]
         arr_e, mu_e, om_e, pu_e, size_e, ing_e, is_first = xs[:7]
         if state_ind:
             keys_e, rest = rest[0], rest[1:]
+        if tel_trace:
+            e_idx, t_e = rest[-2], rest[-1]
+            rest = rest[:-2]
         if faulty:
             alive_e, alive_prev_e = rest
             # Aliveness *entering* the epoch drives the boundary decision;
@@ -370,6 +402,26 @@ def simulate_placed(
         sync_c = replica_sync_cost(
             d_new, size_e, wan, obs.wpue_bar, cfg.update_fraction
         )
+        if tel_trace:
+            # Epoch-boundary flight record: realized churn vs the rule's
+            # asked-for churn (move-budget use), plus the epoch's WAN and
+            # sync bills — pushed once per epoch into the carried ring.
+            churn = 0.5 * jnp.sum(jnp.abs(d_new - d_drift))
+            tgt_churn = 0.5 * jnp.sum(jnp.abs(target - d_drift))
+            ring = ring_push(
+                ring, jnp.bool_(True), e_idx * w, EV_EPOCH,
+                (wan_gb, wan_c, sync_c, churn,
+                 churn / jnp.maximum(tgt_churn, _EPS),
+                 e_idx.astype(jnp.float32)),
+            )
+            if ingest is not None and faulty:
+                ring = ring_push(
+                    ring,
+                    jnp.logical_and(any_dead_b, jnp.logical_not(is_first)),
+                    e_idx * w, EV_INGEST_REDIRECT,
+                    (jnp.sum(ing_e * (1.0 - alive_b)[None, :]),
+                     jnp.float32(n) - jnp.sum(alive_b)),
+                )
         if cfg.io_coupling:
             scale_e = io_slowdown_from_bandwidth(
                 up, down, d_new, cfg.io_compute_seconds, cfg.io_job_gb
@@ -388,7 +440,10 @@ def simulate_placed(
 
         def slot(carry2, xs2):
             if faulty:
-                q2, key2, d_c, r_c, fired = carry2
+                if tel_trace:
+                    q2, key2, d_c, r_c, fired, ring2 = carry2
+                else:
+                    q2, key2, d_c, r_c, fired = carry2
             else:
                 q2, key2 = carry2
             arrivals, mu, ec, er = xs2[:4]
@@ -401,6 +456,8 @@ def simulate_placed(
                 sub = key2   # key-ignoring policy: no per-slot split
             aux = d_new
             if faulty:
+                if tel_trace:
+                    t_t, rest2 = rest2[-1], rest2[:-1]
                 alive_t, alive_prev_t, om_t, pu_t = rest2
                 died = alive_prev_t * (1.0 - alive_t)                 # (N,)
                 any_died = jnp.any(died > 0.5)
@@ -458,6 +515,15 @@ def simulate_placed(
                     any_died, recover, no_recover, q2, d_masked, d_drop, mu
                 )
                 fired = jnp.logical_or(fired, any_died)
+                if tel_trace:
+                    # The flight record of the recovery epoch the cond just
+                    # (maybe) ran: a masked ring write, so the no-edge slot
+                    # costs a handful of fused selects and writes nothing.
+                    ring2 = ring_push(
+                        ring2, any_died, t_t, EV_RECOVERY,
+                        (rec_gb, rec_cost, jnp.sum(died),
+                         jnp.argmax(died).astype(jnp.float32)),
+                    )
                 # Epoch tables go stale the moment a recovery re-places
                 # mid-epoch; re-derive this slot's row from the carried r
                 # (also cond-gated: no fault so far -> no extra einsums).
@@ -476,25 +542,43 @@ def simulate_placed(
                 f_m = _survivor_renorm(f * alive_t[:, None], f_fb, axis=0)
                 f = jnp.where(any_dead, f_m, f)
             q_next, out = slot_step(q2, f, arrivals, mu, ec, er)
+            if tel_on:
+                tel_out = (jnp.sum(q_next, axis=-1),)     # (N,) per-site q
+            else:
+                tel_out = ()
             if faulty:
-                return (q_next, key2, d_c, r_c, fired), out + (rec_cost, rec_gb)
-            return (q_next, key2), out
+                carry_next = (q_next, key2, d_c, r_c, fired)
+                if tel_trace:
+                    carry_next = carry_next + (ring2,)
+                return carry_next, out + (rec_cost, rec_gb) + tel_out
+            return (q_next, key2), out + tel_out
 
         slot_xs = (arr_e, mu_e, e_cost, e_raw)
         if state_ind:
             slot_xs = slot_xs + (keys_e,)
         if faulty:
             slot_xs = slot_xs + (alive_e, alive_prev_e, om_e, pu_e)
+            if tel_trace:
+                slot_xs = slot_xs + (t_e,)
             carry0 = (q, key, d_new, r_e, jnp.bool_(False))
-            (q, key, d_carry, _, _), slot_outs = jax.lax.scan(
-                slot, carry0, slot_xs
-            )
+            if tel_trace:
+                carry0 = carry0 + (ring,)
+                (q, key, d_carry, _, _, ring), slot_outs = jax.lax.scan(
+                    slot, carry0, slot_xs
+                )
+            else:
+                (q, key, d_carry, _, _), slot_outs = jax.lax.scan(
+                    slot, carry0, slot_xs
+                )
         else:
             (q, key), slot_outs = jax.lax.scan(slot, (q, key), slot_xs)
             d_carry = d_new
         epoch_out = slot_outs + (d_new, r_e, wan_c, wan_e, wan_gb, wan_lat,
                                  sync_c, scale_e)
-        return (q, key, d_carry), epoch_out
+        carry_out = (q, key, d_carry)
+        if tel_trace:
+            carry_out = carry_out + (ring,)
+        return carry_out, epoch_out
 
     xs = (arr_ep, mu_ep, om_ep, pu_ep, sizes_gb,
           ingest if ingest is not None else jnp.zeros((n_epochs, k_types, n)),
@@ -503,17 +587,26 @@ def simulate_placed(
         xs = xs + (keys_ep,)
     if faulty:
         xs = xs + (ep(alive), ep(alive_prev))
-    (q_final, _, _), outs = jax.lax.scan(epoch, (q0, key, d0), xs)
-    if faulty:
-        (cost, energy, btot, bavg, f_trace, rec_cost, rec_gb,
-         d_tr, r_tr, wc, we, wgb, wlat, sc, msc) = outs
+    carry_init = (q0, key, d0)
+    if tel_trace:
+        xs = xs + (jnp.arange(n_epochs, dtype=jnp.int32),
+                   jnp.arange(t_slots, dtype=jnp.int32).reshape(n_epochs, w))
+        carry_init = carry_init + (ring_init(telemetry.capacity),)
+        (q_final, _, _, ring_out), outs = jax.lax.scan(epoch, carry_init, xs)
     else:
-        (cost, energy, btot, bavg, f_trace,
-         d_tr, r_tr, wc, we, wgb, wlat, sc, msc) = outs
+        (q_final, _, _), outs = jax.lax.scan(epoch, carry_init, xs)
+    # Per-slot scan columns lead; the epoch-level audit trail follows.
+    n_slot_cols = 5 + (2 if faulty else 0) + (1 if tel_on else 0)
+    slot_cols = outs[:n_slot_cols]
+    (d_tr, r_tr, wc, we, wgb, wlat, sc, msc) = outs[n_slot_cols:]
+    (cost, energy, btot, bavg, f_trace) = slot_cols[:5]
+    if faulty:
+        rec_cost, rec_gb = slot_cols[5:7]
+    else:
         rec_cost = jnp.zeros((n_epochs, w), jnp.float32)
         rec_gb = jnp.zeros((n_epochs, w), jnp.float32)
     flat = lambda x: x.reshape((t_slots,) + x.shape[2:])
-    return PlacedOutputs(
+    placed = PlacedOutputs(
         cost=flat(cost), energy=flat(energy),
         backlog_total=flat(btot), backlog_avg=flat(bavg),
         q_final=q_final, f_trace=flat(f_trace),
@@ -523,10 +616,19 @@ def simulate_placed(
         recovery_cost=flat(rec_cost), recovery_gb=flat(rec_gb),
         mu_scale=msc,
     )
+    if tel_on:
+        q_site = slot_cols[-1]                                # (E, W, N)
+        return placed, TelemetryFrame(
+            ring=ring_out if tel_trace else ring_init(1),
+            metrics={"q_site": flat(q_site)},
+        )
+    return placed
 
 
 @functools.partial(
-    jax.jit, static_argnames=("build_inputs", "policy", "rule", "cfg", "n_runs")
+    jax.jit,
+    static_argnames=("build_inputs", "policy", "rule", "cfg", "n_runs",
+                     "telemetry"),
 )
 def simulate_placed_many(
     build_inputs: Callable[[Array], SimInputs],
@@ -542,12 +644,15 @@ def simulate_placed_many(
     sizes_gb: Array | None = None,
     alive: Array | None = None,
     move_budget: Array | None = None,
+    telemetry: TelemetryConfig | None = None,
 ) -> PlacedOutputs:
     """Monte-Carlo replication of :func:`simulate_placed` (vmap over keys).
 
     Mirrors ``simulate_many``: fresh stochastic traces + policy randomness
     per run, deterministic traces (prices, PUE, drift, the site-alive mask)
-    shared. One compilation serves every run.
+    shared. One compilation serves every run. With telemetry enabled the
+    frames stack on the runs axis like everything else — decode one run's
+    lane with :func:`repro.telemetry.collect.collect_records`.
     """
     keys = jax.random.split(key, n_runs)
 
@@ -556,7 +661,7 @@ def simulate_placed_many(
         return simulate_placed(
             build_inputs(k_build), up, down, policy, rule, k_sim, cfg,
             scalar=scalar, ingest=ingest, sizes_gb=sizes_gb, alive=alive,
-            move_budget=move_budget,
+            move_budget=move_budget, telemetry=telemetry,
         )
 
     return jax.vmap(one)(keys)

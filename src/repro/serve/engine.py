@@ -131,14 +131,51 @@ class FleetEngine:
             done += b
         return min(done, n_jobs), time.perf_counter() - t0
 
-    def run(self, execute_real: bool = True) -> dict:
-        """Run the slot loop. Returns per-slot traces + summary."""
+    def run(self, execute_real: bool = True, stream=None) -> dict:
+        """Run the slot loop. Returns per-slot traces + summary.
+
+        Args:
+            execute_real: run real prefill+decode for drained jobs.
+            stream: optional callable receiving one JSON-ready dict per
+                slot as the run progresses (live telemetry). The record
+                is emitted through ``jax.experimental.io_callback``
+                (``ordered=True``) from a jitted emitter — the same
+                host-callback mechanism a fully jitted serving loop
+                would stream through, so consumers see records in slot
+                order even under async dispatch.
+
+        The returned dict keeps its original keys (backward-compatible)
+        and adds ``history``: one record per slot with the dispatch
+        choice per class (argmax pod), per-pod queue depth after the
+        slot, and IT energy in Joules per class — what
+        ``examples/serve_geo.py`` prints as a timeline.
+        """
         fcfg = self.fcfg
         n, k = fcfg.n_pods, len(self.classes)
         q = jnp.zeros((n, k), jnp.float32)
         shares = np.asarray(fcfg.capacity_shares[:n], np.float32)
         costs, backlogs, dispatches, exec_secs = [], [], [], 0.0
+        history: list[dict] = []
+        e_per_job = np.asarray(
+            [rc.energy_per_job_j() for rc in self.classes], np.float64
+        )
         rng = np.random.default_rng(fcfg.seed)
+
+        emit = None
+        if stream is not None:
+            from jax.experimental import io_callback
+
+            def _host_emit(t_, cost_, backlog_):
+                stream({
+                    "type": "metric", "engine": "serve",
+                    "t": int(t_), "cost": float(cost_),
+                    "backlog": float(backlog_),
+                })
+
+            @jax.jit
+            def emit(t_, cost_, backlog_):
+                io_callback(_host_emit, None, t_, cost_, backlog_,
+                            ordered=True)
 
         for t in range(fcfg.horizon_slots):
             arrivals = jnp.asarray(
@@ -164,7 +201,19 @@ class FleetEngine:
             q = queue_step(q, f, arrivals, mu)
             costs.append(cost)
             backlogs.append(float(jnp.sum(q)))
-            dispatches.append(np.asarray(f))
+            f_np = np.asarray(f)
+            dispatches.append(f_np)
+            history.append({
+                "t": t,
+                "choice": np.argmax(f_np, axis=0).tolist(),       # pod per k
+                "q_pod": np.asarray(jnp.sum(q, axis=1)).tolist(),
+                "energy_j": (
+                    f_np.sum(axis=0) * np.asarray(arrivals) * e_per_job
+                ).tolist(),
+            })
+            if emit is not None:
+                emit(jnp.int32(t), jnp.float32(cost),
+                     jnp.float32(backlogs[-1]))
 
         return {
             "cost": np.asarray(costs),
@@ -173,4 +222,5 @@ class FleetEngine:
             "exec_seconds": exec_secs,
             "mean_cost": float(np.mean(costs)),
             "final_backlog": backlogs[-1],
+            "history": history,
         }

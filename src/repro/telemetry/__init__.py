@@ -1,0 +1,65 @@
+"""repro.telemetry — a jit-safe flight recorder for every engine.
+
+Three layers:
+
+* **Recording** (device side, jit-safe): a static :class:`TelemetryConfig`
+  level gates everything — ``OFF`` (default) keeps each engine's jaxpr
+  byte-identical to the pre-telemetry build; ``SUMMARY`` adds per-slot
+  metric streams as extra stacked scan outputs; ``TRACE`` adds the
+  fixed-capacity, mask-compacted :class:`EventRing` written inside
+  ``lax.scan`` / ``lax.cond`` bodies (recovery epochs, placement-epoch
+  churn, dead-site ingest redirects). Engines return
+  ``(outputs, TelemetryFrame)`` when a level is enabled.
+* **Decoding** (host side): :func:`collect_records` turns outputs + frame
+  into a flat JSON-ready record stream — in-scan events, derived events
+  (GMSA manager-switch edges), per-slot metrics, the embedded summary.
+* **Export**: :func:`write_jsonl` / :func:`read_jsonl`,
+  :func:`render_timeline`, and :func:`cross_check`, with the CLI
+  ``python -m repro.telemetry.report run.jsonl --check``.
+"""
+
+from repro.telemetry.config import (
+    OFF,
+    SUMMARY,
+    TRACE,
+    Level,
+    TelemetryConfig,
+    enabled,
+    tracing,
+)
+from repro.telemetry.ring import (
+    EV_EPOCH,
+    EV_INGEST_REDIRECT,
+    EV_RECOVERY,
+    EV_SWITCH,
+    EventRing,
+    TelemetryFrame,
+    empty_frame,
+    ring_events,
+    ring_init,
+    ring_push,
+)
+from repro.telemetry.collect import (
+    collect_records,
+    engine_kind,
+    switch_events,
+    time_to_slo,
+)
+from repro.telemetry.export import (
+    cross_check,
+    read_jsonl,
+    render_timeline,
+    sparkline,
+    write_jsonl,
+)
+
+__all__ = [
+    "Level", "TelemetryConfig", "OFF", "SUMMARY", "TRACE",
+    "enabled", "tracing",
+    "EventRing", "TelemetryFrame", "empty_frame",
+    "ring_init", "ring_push", "ring_events",
+    "EV_RECOVERY", "EV_EPOCH", "EV_SWITCH", "EV_INGEST_REDIRECT",
+    "collect_records", "engine_kind", "switch_events", "time_to_slo",
+    "write_jsonl", "read_jsonl", "render_timeline", "sparkline",
+    "cross_check",
+]

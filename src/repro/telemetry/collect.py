@@ -1,0 +1,203 @@
+"""Host-side decoding: engine outputs + TelemetryFrame -> JSON-ready records.
+
+One flat record stream per run, newline-delimited when written to disk
+(:mod:`repro.telemetry.export`). Record types:
+
+* ``{"type": "meta", ...}`` — engine kind, horizon, level, schema version.
+* ``{"type": "event", "t": ..., "code": "recovery" | "epoch" | "switch" |
+  "ingest_redirect", ...}`` — the in-scan ring decoded by code schema,
+  plus the post-scan *derived* events (GMSA manager-switch edges from
+  ``f_trace``); recovery events carry ``time_to_slo`` (slots from the
+  death edge until the backlog stream re-enters the SLO band; ``null`` if
+  it never does within the horizon).
+* ``{"type": "metric", "t": ..., ...}`` — per-slot streams (dispatch /
+  compute cost, backlog, per-slot WAN for staged runs, the SUMMARY-level
+  extra scan outputs).
+* ``{"type": "summary", ...}`` — the engine's ``summarize_*`` dict,
+  embedded so the report tool can cross-check the stream standalone.
+
+This module never imports the engines (duck-typing on output fields keeps
+``repro.telemetry`` dependency-free and cycle-free); engines import only
+:mod:`repro.telemetry.config` / :mod:`repro.telemetry.ring`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.telemetry.config import TelemetryConfig
+from repro.telemetry.ring import (
+    CODE_NAMES,
+    EV_EPOCH,
+    EV_INGEST_REDIRECT,
+    EV_RECOVERY,
+    TelemetryFrame,
+    ring_events,
+)
+
+SCHEMA_VERSION = 1
+
+#: Per-code payload field names, in ring lane order.
+FIELDS_BY_CODE = {
+    EV_RECOVERY: ("recovery_gb", "recovery_cost", "n_died", "site"),
+    EV_EPOCH: ("wan_gb", "wan_cost", "sync_cost", "churn", "budget_use",
+               "epoch"),
+    EV_INGEST_REDIRECT: ("redirected_mass", "n_dead"),
+}
+_INT_FIELDS = {"n_died", "site", "epoch", "n_dead", "k", "src", "dst", "stage"}
+
+
+def _np(x):
+    return np.asarray(x)
+
+
+def engine_kind(outs) -> str:
+    """Duck-typed engine identification from the outputs NamedTuple."""
+    if hasattr(outs, "recovery_cost"):
+        return "placed"
+    if hasattr(outs, "completed"):
+        return "staged"
+    return "sim"
+
+
+def switch_events(f_trace: np.ndarray) -> list[dict]:
+    """GMSA manager-switch edges derived from the dispatch trace.
+
+    ``f_trace`` is (T, N, K) or (T, N, K, S); a switch fires at slot t for
+    type k (stage s) when the argmax site differs from slot t-1's. One-hot
+    dispatch makes the argmax the manager choice; fractional policies
+    (DATA/RANDOM) report their modal site, which is still the natural
+    "where is the mass going" edge.
+    """
+    f = _np(f_trace)
+    staged = f.ndim == 4
+    if not staged:
+        f = f[..., None]                                    # (T, N, K, 1)
+    site = f.argmax(axis=1)                                 # (T, K, S)
+    events: list[dict] = []
+    prev = site[0]
+    for t in range(1, site.shape[0]):
+        cur = site[t]
+        moved = np.argwhere(cur != prev)
+        for k, s in moved:
+            ev = {
+                "type": "event", "t": int(t), "code": "switch",
+                "k": int(k), "src": int(prev[k, s]), "dst": int(cur[k, s]),
+            }
+            if staged:
+                ev["stage"] = int(s)
+            events.append(ev)
+        prev = cur
+    return events
+
+
+def time_to_slo(
+    backlog: np.ndarray, t_edge: int, cfg: TelemetryConfig
+) -> tuple[int | None, float]:
+    """Slots from a death edge until backlog re-enters the SLO band.
+
+    The threshold is ``cfg.slo_backlog`` when set, else ``cfg.slo_factor``
+    times the mean backlog over the ``cfg.slo_window`` slots before the
+    edge (the pre-fault operating level). Returns ``(slots_or_None, thr)``.
+    """
+    backlog = _np(backlog)
+    if cfg.slo_backlog is not None:
+        thr = float(cfg.slo_backlog)
+    else:
+        lo = max(0, t_edge - cfg.slo_window)
+        pre = backlog[lo:t_edge]
+        thr = cfg.slo_factor * (float(pre.mean()) if pre.size else 0.0)
+    after = backlog[t_edge:]
+    ok = np.nonzero(after <= thr)[0]
+    return (int(ok[0]) if ok.size else None), thr
+
+
+def _decoded_ring(frame: TelemetryFrame) -> tuple[list[dict], int]:
+    events, dropped = ring_events(frame.ring)
+    out = []
+    for ev in events:
+        code = ev["code"]
+        rec = {"type": "event", "t": ev["t"],
+               "code": CODE_NAMES.get(code, str(code))}
+        for i, name in enumerate(FIELDS_BY_CODE.get(code, ())):
+            v = float(ev["val"][i])
+            rec[name] = int(v) if name in _INT_FIELDS else v
+        out.append(rec)
+    return out, dropped
+
+
+def collect_records(
+    outs,
+    frame: TelemetryFrame | None = None,
+    *,
+    cfg: TelemetryConfig | None = None,
+    summary: dict | None = None,
+    meta: dict | None = None,
+    include_switches: bool = True,
+    include_metrics: bool = True,
+) -> list[dict]:
+    """Build the full record stream for one run.
+
+    ``outs`` must be a single run (no Monte-Carlo axis) — flight recording
+    is per-run by construction; pick one lane of a vmapped sweep first.
+    """
+    cfg = cfg or TelemetryConfig()
+    kind = engine_kind(outs)
+    cost = _np(outs.cost)
+    if cost.ndim != 1:
+        raise ValueError(
+            "collect_records decodes ONE run; index the Monte-Carlo axis "
+            f"first (got cost shape {cost.shape})"
+        )
+    t_slots = cost.shape[0]
+    backlog = _np(outs.backlog_avg)
+
+    records: list[dict] = [{
+        "type": "meta", "schema": SCHEMA_VERSION, "kind": kind,
+        "t_slots": int(t_slots),
+        "level": int(cfg.level), **(meta or {}),
+    }]
+
+    events: list[dict] = []
+    dropped = 0
+    if frame is not None:
+        events, dropped = _decoded_ring(frame)
+        for ev in events:
+            if ev["code"] == "recovery":
+                tts, thr = time_to_slo(backlog, ev["t"], cfg)
+                ev["time_to_slo"] = tts
+                ev["slo_backlog"] = thr
+    records[0]["events_dropped"] = dropped
+    if include_switches:
+        events.extend(switch_events(outs.f_trace))
+    events.sort(key=lambda e: (e["t"], e["code"]))
+    records.extend(events)
+
+    if include_metrics:
+        metrics = dict(frame.metrics) if frame is not None else {}
+        q_site = metrics.get("q_site")
+        stage_wan = metrics.get("stage_wan_cost")
+        stage_gb = metrics.get("stage_wan_gb")
+        wan_slot = _np(outs.wan_cost) if kind == "staged" else None
+        wan_gb_slot = _np(outs.wan_gb) if kind == "staged" else None
+        rec_slot = _np(outs.recovery_cost) if kind == "placed" else None
+        rec_gb_slot = _np(outs.recovery_gb) if kind == "placed" else None
+        for t in range(t_slots):
+            rec = {"type": "metric", "t": t,
+                   "cost": float(cost[t]), "backlog": float(backlog[t])}
+            if q_site is not None:
+                rec["q_site"] = [float(x) for x in _np(q_site)[t]]
+            if wan_slot is not None:
+                rec["wan_cost"] = float(wan_slot[t])
+                rec["wan_gb"] = float(wan_gb_slot[t])
+            if stage_wan is not None:
+                rec["stage_wan_cost"] = [float(x) for x in _np(stage_wan)[t]]
+                rec["stage_wan_gb"] = [float(x) for x in _np(stage_gb)[t]]
+            if rec_slot is not None and rec_slot[t] != 0.0:
+                rec["recovery_cost"] = float(rec_slot[t])
+                rec["recovery_gb"] = float(rec_gb_slot[t])
+            records.append(rec)
+
+    if summary is not None:
+        records.append({"type": "summary", "kind": kind, **summary})
+    return records

@@ -1,0 +1,75 @@
+"""Telemetry levels and the static config every engine threads through.
+
+The contract that keeps the PR-4 fast path intact: the telemetry level is
+**static** (a jit-static argument), so ``OFF`` — the default — traces to
+the byte-identical jaxpr the engines produced before telemetry existed:
+zero extra scan outputs, zero ring carries, zero cost. ``SUMMARY`` adds
+per-slot metric streams as extra stacked scan outputs; ``TRACE`` adds the
+fixed-capacity, mask-compacted event ring recorded inside the
+``lax.scan`` / ``lax.cond`` bodies (:mod:`repro.telemetry.ring`).
+
+Engines that enable telemetry return ``(outputs, TelemetryFrame)`` instead
+of bare ``outputs`` — the frame is a pytree (device arrays), decoded
+host-side by :mod:`repro.telemetry.collect` / :mod:`repro.telemetry.export`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class Level(enum.IntEnum):
+    """Telemetry verbosity. Static: each level is its own jit compilation."""
+
+    OFF = 0       # byte-identical jaxpr to the pre-telemetry engines
+    SUMMARY = 1   # per-slot metric streams (extra stacked scan outputs)
+    TRACE = 2     # SUMMARY + the in-scan event ring
+
+
+OFF = Level.OFF
+SUMMARY = Level.SUMMARY
+TRACE = Level.TRACE
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Static flight-recorder knobs (hashable: rides in jit static args).
+
+    Attributes:
+        level: :class:`Level`. ``OFF`` is bit-exact with no telemetry.
+        capacity: event-ring slots. Events beyond capacity overwrite the
+            oldest (the ring keeps a total count, so the exporter reports
+            exactly how many were dropped — and the cross-check refuses to
+            certify a stream that lost events).
+        slo_backlog: absolute backlog-per-queue SLO used for the
+            recovery-time-to-SLO metric. ``None`` derives the threshold
+            per event from the pre-fault backlog window
+            (``slo_factor`` × the mean over the ``slo_window`` slots
+            before the death edge).
+        slo_factor / slo_window: the derived-threshold parameters.
+    """
+
+    level: Level = Level.OFF
+    capacity: int = 256
+    slo_backlog: float | None = None
+    slo_factor: float = 1.5
+    slo_window: int = 12
+
+    @property
+    def enabled(self) -> bool:
+        return self.level >= Level.SUMMARY
+
+    @property
+    def tracing(self) -> bool:
+        return self.level >= Level.TRACE
+
+
+def enabled(cfg: TelemetryConfig | None) -> bool:
+    """True when ``cfg`` asks for any telemetry (None counts as OFF)."""
+    return cfg is not None and cfg.enabled
+
+
+def tracing(cfg: TelemetryConfig | None) -> bool:
+    """True when ``cfg`` asks for the in-scan event ring."""
+    return cfg is not None and cfg.tracing

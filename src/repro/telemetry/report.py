@@ -1,0 +1,52 @@
+"""Flight-record report tool.
+
+    PYTHONPATH=src python -m repro.telemetry.report run.jsonl [--check]
+        [--codes recovery,epoch] [--max-events 40]
+
+Renders the timeline of a JSONL record stream
+(:func:`repro.telemetry.export.render_timeline`); ``--check`` additionally
+rebuilds the summarize totals from the stream and exits non-zero when they
+disagree with the embedded summary record — the CI round-trip smoke.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.telemetry.export import cross_check, read_jsonl, render_timeline
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", help="JSONL record stream to render")
+    ap.add_argument("--check", action="store_true",
+                    help="cross-check stream totals against the embedded "
+                         "summary record (exit 1 on mismatch)")
+    ap.add_argument("--codes", default=None,
+                    help="comma-separated event codes to show "
+                         "(default: all)")
+    ap.add_argument("--max-events", type=int, default=200)
+    args = ap.parse_args(argv)
+
+    records = read_jsonl(args.path)
+    codes = set(args.codes.split(",")) if args.codes else None
+    print(render_timeline(records, codes=codes, max_events=args.max_events))
+
+    if args.check:
+        res = cross_check(records)
+        status = "OK" if res["ok"] else "MISMATCH"
+        print(f"\ncross-check [{status}] kind={res['kind']} "
+              f"dropped={res['events_dropped']}")
+        for name, c in res.get("checks", {}).items():
+            mark = "✓" if c["ok"] else "✗"
+            print(f"  {mark} {name:<15} stream={c['stream']:.6g} "
+                  f"summary={c['summary']:.6g}")
+        if "error" in res:
+            print(f"  error: {res['error']}")
+        return 0 if res["ok"] else 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,140 @@
+"""Fixed-capacity, mask-compacted event ring — jit-safe flight recording.
+
+The recorder that can live inside ``lax.scan`` / ``lax.cond`` bodies: a
+static-shape circular buffer carried through the scan, written with masked
+dynamic updates (``do`` is a traced bool — no control flow, no shape
+change), so recording an event on the rare branch of a ``lax.cond`` costs
+a handful of fused ops and recording *nothing* costs the same handful with
+the mask low. The ring keeps a monotone push count; host-side
+:func:`ring_events` reorders the buffer into push order and reports how
+many events fell off the back (capacity overflow is detected, never
+silent).
+
+Event payloads are ``N_FIELDS`` float32 lanes whose meaning depends on the
+event code — the schema lives with the codes below and is decoded by
+:mod:`repro.telemetry.collect`.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+#: Payload lanes per event (fixed so the ring's shape is static).
+N_FIELDS = 6
+
+# -- event codes ------------------------------------------------------------
+#: Off-schedule recovery epoch fired on a site-death edge (placed engine).
+#: fields: [recovery_gb, recovery_cost, n_died, first_dead_site, 0, 0]
+EV_RECOVERY = 1
+#: Slow-loop epoch boundary (placed engine).
+#: fields: [wan_gb, wan_cost, sync_cost, churn, budget_use, epoch]
+EV_EPOCH = 2
+#: GMSA manager-switch edge (derived post-scan from f_trace).
+#: fields: [k, from_site, to_site, stage, 0, 0]
+EV_SWITCH = 3
+#: Ingest aimed at dead sites redirected to survivors (placed engine).
+#: fields: [redirected_mass, n_dead, 0, 0, 0, 0]
+EV_INGEST_REDIRECT = 4
+
+CODE_NAMES = {
+    EV_RECOVERY: "recovery",
+    EV_EPOCH: "epoch",
+    EV_SWITCH: "switch",
+    EV_INGEST_REDIRECT: "ingest_redirect",
+}
+
+
+class EventRing(NamedTuple):
+    """The carried recorder state: (count, t, code, val) — all static shape."""
+
+    count: Array   # ()  int32  total pushes attempted (drops = count - C)
+    t: Array       # (C,) int32  slot index of each buffered event
+    code: Array    # (C,) int32  event code
+    val: Array     # (C, N_FIELDS) float32 payload
+
+
+class TelemetryFrame(NamedTuple):
+    """What an engine returns next to its outputs when telemetry is on.
+
+    ``ring`` holds the in-scan events (empty when the engine records none
+    or the level is SUMMARY); ``metrics`` maps stream names to per-slot
+    (or per-epoch) arrays — the extra stacked scan outputs and post-scan
+    derived streams.
+    """
+
+    ring: EventRing
+    metrics: dict
+
+
+def ring_init(capacity: int) -> EventRing:
+    """An empty ring of ``capacity`` slots."""
+    return EventRing(
+        count=jnp.zeros((), jnp.int32),
+        t=jnp.full((capacity,), -1, jnp.int32),
+        code=jnp.zeros((capacity,), jnp.int32),
+        val=jnp.zeros((capacity, N_FIELDS), jnp.float32),
+    )
+
+
+def ring_push(
+    ring: EventRing,
+    do: Array,
+    t: Array,
+    code: int,
+    fields: Sequence[Array],
+) -> EventRing:
+    """Record one event iff ``do`` — a masked write, safe anywhere in jit.
+
+    ``do`` is a traced bool scalar; when low, every buffer row keeps its
+    old value and the count does not advance, so the no-event path is
+    bitwise idempotent on the ring. ``fields`` is up to ``N_FIELDS``
+    scalars (zero-padded).
+    """
+    cap = ring.t.shape[0]
+    if len(fields) > N_FIELDS:
+        raise ValueError(f"at most {N_FIELDS} payload fields, got {len(fields)}")
+    pos = jnp.mod(ring.count, cap)
+    row = jnp.zeros((N_FIELDS,), jnp.float32)
+    if fields:
+        row = row.at[: len(fields)].set(
+            jnp.stack([jnp.asarray(f, jnp.float32) for f in fields])
+        )
+    do = jnp.asarray(do, bool)
+    return EventRing(
+        count=ring.count + do.astype(jnp.int32),
+        t=ring.t.at[pos].set(jnp.where(do, jnp.asarray(t, jnp.int32), ring.t[pos])),
+        code=ring.code.at[pos].set(
+            jnp.where(do, jnp.int32(code), ring.code[pos])
+        ),
+        val=ring.val.at[pos].set(jnp.where(do, row, ring.val[pos])),
+    )
+
+
+def empty_frame() -> TelemetryFrame:
+    """A frame with a zero-capacity ring — engines that derive all events."""
+    return TelemetryFrame(ring=ring_init(1), metrics={})
+
+
+def ring_events(ring: EventRing) -> tuple[list[dict], int]:
+    """Host-side decode: buffered events in push order + dropped count.
+
+    Returns ``(events, dropped)`` where each event is
+    ``{"t": int, "code": int, "val": np.ndarray(N_FIELDS,)}`` and
+    ``dropped`` counts pushes that fell off the back of the ring.
+    """
+    count = int(np.asarray(ring.count))
+    cap = ring.t.shape[0]
+    n = min(count, cap)
+    dropped = count - n
+    idx = (count - n + np.arange(n)) % cap
+    t = np.asarray(ring.t)[idx]
+    code = np.asarray(ring.code)[idx]
+    val = np.asarray(ring.val)[idx]
+    return (
+        [{"t": int(t[i]), "code": int(code[i]), "val": val[i]} for i in range(n)],
+        dropped,
+    )

@@ -21,6 +21,34 @@ def test_dispatch_only_run(engine):
     assert engine.p_it[0] > 0
 
 
+def test_history_records_choice_queue_energy(engine):
+    out = engine.run(execute_real=False)
+    hist = out["history"]
+    assert [h["t"] for h in hist] == list(range(12))
+    for t, h in enumerate(hist):
+        # Choice is the argmax pod of the recorded dispatch row.
+        np.testing.assert_array_equal(
+            h["choice"], out["dispatch"][t].argmax(axis=0))
+        assert len(h["q_pod"]) == engine.fcfg.n_pods
+        assert all(d >= 0.0 for d in h["q_pod"])
+        assert all(j >= 0.0 for j in h["energy_j"])
+    # Per-pod depths re-sum to the recorded total backlog.
+    np.testing.assert_allclose(
+        [sum(h["q_pod"]) for h in hist], out["backlog"], rtol=1e-5)
+    # Energy pricing actually priced something over the horizon.
+    assert sum(sum(h["energy_j"]) for h in hist) > 0.0
+
+
+def test_stream_callback_receives_ordered_slots(engine):
+    seen = []
+    out = engine.run(execute_real=False, stream=seen.append)
+    assert [r["t"] for r in seen] == list(range(12))
+    for r, c, b in zip(seen, out["cost"], out["backlog"]):
+        assert r["type"] == "metric" and r["engine"] == "serve"
+        assert r["cost"] == pytest.approx(float(c), rel=1e-5, abs=1e-12)
+        assert r["backlog"] == pytest.approx(float(b), rel=1e-5, abs=1e-12)
+
+
 def test_real_execution_smoke(engine):
     out = engine.run(execute_real=True)
     assert out["exec_seconds"] > 0           # models actually ran

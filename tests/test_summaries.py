@@ -1,0 +1,139 @@
+"""Summarize invariants on random inputs (PR 6 satellite).
+
+The ``summarize_*`` dicts are the contract the telemetry cross-check
+rebuilds from event streams, so their internal identities are pinned here
+directly on random arrays — no engine run required:
+
+* ``time_avg_total_cost == dispatch/compute + wan (+ sync + recovery)``
+* GB totals are the plain sums of the per-slot/per-epoch GB streams
+  (conservation: summarizing never invents or loses bytes),
+
+with and without a leading Monte-Carlo runs axis.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.simulator import SimOutputs, summarize
+from repro.jobs.engine import StagedOutputs, summarize_staged
+from repro.placement.controller import PlacedOutputs, summarize_placed
+
+T, E, N, K, S = 20, 4, 3, 2, 3
+
+
+def _rand(rng, *shape):
+    return rng.uniform(0.1, 5.0, size=shape).astype(np.float32)
+
+
+def _maybe_runs(shape, runs):
+    return shape if runs is None else (runs, *shape)
+
+
+@pytest.fixture(params=[None, 5], ids=["single", "runs5"])
+def runs(request):
+    return request.param
+
+
+def _sim_outputs(rng, runs):
+    return SimOutputs(
+        cost=_rand(rng, *_maybe_runs((T,), runs)),
+        energy=_rand(rng, *_maybe_runs((T,), runs)),
+        backlog_total=_rand(rng, *_maybe_runs((T,), runs)),
+        backlog_avg=_rand(rng, *_maybe_runs((T,), runs)),
+        q_final=_rand(rng, *_maybe_runs((N, K), runs)),
+        f_trace=_rand(rng, *_maybe_runs((T, N, K), runs)),
+    )
+
+
+def _placed_outputs(rng, runs):
+    sim = _sim_outputs(rng, runs)
+    return PlacedOutputs(
+        cost=sim.cost, energy=sim.energy,
+        backlog_total=sim.backlog_total, backlog_avg=sim.backlog_avg,
+        q_final=sim.q_final, f_trace=sim.f_trace,
+        placements=_rand(rng, *_maybe_runs((E, K, N), runs)),
+        r_trace=_rand(rng, *_maybe_runs((E, K, N, N), runs)),
+        wan_cost=_rand(rng, *_maybe_runs((E,), runs)),
+        wan_energy=_rand(rng, *_maybe_runs((E,), runs)),
+        wan_gb=_rand(rng, *_maybe_runs((E,), runs)),
+        wan_latency_s=_rand(rng, *_maybe_runs((E,), runs)),
+        sync_cost=_rand(rng, *_maybe_runs((E,), runs)),
+        recovery_cost=_rand(rng, *_maybe_runs((T,), runs)),
+        recovery_gb=_rand(rng, *_maybe_runs((T,), runs)),
+        mu_scale=_rand(rng, *_maybe_runs((E, N), runs)),
+    )
+
+
+def _staged_outputs(rng, runs):
+    return StagedOutputs(
+        cost=_rand(rng, *_maybe_runs((T,), runs)),
+        energy=_rand(rng, *_maybe_runs((T,), runs)),
+        backlog_total=_rand(rng, *_maybe_runs((T,), runs)),
+        backlog_avg=_rand(rng, *_maybe_runs((T,), runs)),
+        q_final=_rand(rng, *_maybe_runs((N, K, S), runs)),
+        f_trace=_rand(rng, *_maybe_runs((T, N, K, S), runs)),
+        wan_cost=_rand(rng, *_maybe_runs((T,), runs)),
+        wan_energy=_rand(rng, *_maybe_runs((T,), runs)),
+        wan_gb=_rand(rng, *_maybe_runs((T,), runs)),
+        completed=_rand(rng, *_maybe_runs((T, K), runs)),
+    )
+
+
+def test_summarize_means(runs):
+    rng = np.random.default_rng(0)
+    outs = _sim_outputs(rng, runs)
+    s = summarize(outs)
+    assert s["time_avg_cost"] == pytest.approx(float(outs.cost.mean()),
+                                               rel=1e-6)
+    assert s["time_avg_backlog"] == pytest.approx(
+        float(outs.backlog_avg.mean()), rel=1e-6)
+    assert s["final_backlog_total"] == pytest.approx(
+        float(outs.q_final.sum(axis=(-2, -1)).mean()), rel=1e-6)
+
+
+def test_summarize_placed_total_is_the_sum_of_parts(runs):
+    rng = np.random.default_rng(1)
+    outs = _placed_outputs(rng, runs)
+    s = summarize_placed(outs)
+    expect = (s["time_avg_dispatch_cost"] + s["time_avg_wan_cost"]
+              + s["time_avg_sync_cost"] + s["time_avg_recovery_cost"])
+    assert s["time_avg_total_cost"] == pytest.approx(expect, rel=1e-6)
+    # The parts themselves are the declared reductions of the raw streams.
+    assert s["time_avg_dispatch_cost"] == pytest.approx(
+        float(outs.cost.mean()), rel=1e-6)
+    assert s["time_avg_wan_cost"] == pytest.approx(
+        float(outs.wan_cost.sum(axis=-1).mean()) / T, rel=1e-6)
+    assert s["time_avg_sync_cost"] == pytest.approx(
+        float(outs.sync_cost.sum(axis=-1).mean()) / T, rel=1e-6)
+    assert s["time_avg_recovery_cost"] == pytest.approx(
+        float(outs.recovery_cost.mean()), rel=1e-6)
+
+
+def test_summarize_placed_gb_conservation(runs):
+    rng = np.random.default_rng(2)
+    outs = _placed_outputs(rng, runs)
+    s = summarize_placed(outs)
+    assert s["total_wan_gb"] == pytest.approx(
+        float(outs.wan_gb.sum(axis=-1).mean()), rel=1e-6)
+    assert s["total_recovery_gb"] == pytest.approx(
+        float(outs.recovery_gb.sum(axis=-1).mean()), rel=1e-6)
+
+
+def test_summarize_staged_total_is_the_sum_of_parts(runs):
+    rng = np.random.default_rng(3)
+    outs = _staged_outputs(rng, runs)
+    s = summarize_staged(outs)
+    assert s["time_avg_total_cost"] == pytest.approx(
+        s["time_avg_compute_cost"] + s["time_avg_wan_cost"], rel=1e-6)
+    assert s["time_avg_compute_cost"] == pytest.approx(
+        float(outs.cost.mean()), rel=1e-6)
+    assert s["time_avg_wan_cost"] == pytest.approx(
+        float(outs.wan_cost.mean()), rel=1e-6)
+
+
+def test_summarize_staged_gb_conservation(runs):
+    rng = np.random.default_rng(4)
+    outs = _staged_outputs(rng, runs)
+    s = summarize_staged(outs)
+    assert s["total_wan_gb"] == pytest.approx(
+        float(outs.wan_gb.sum(axis=-1).mean()), rel=1e-6)

@@ -1,0 +1,393 @@
+"""repro.telemetry: the jit-safe flight recorder (PR 6).
+
+The load-bearing guarantees, in test form:
+
+* OFF (or ``telemetry=None``) is FREE — every engine traces to the
+  byte-identical jaxpr of the pre-telemetry build, on every policy class.
+* TRACE changes nothing — engine outputs under TRACE equal the bare-run
+  outputs bitwise; telemetry rides alongside, never in the numbers.
+* The event stream is trustworthy — ring capacity overflow is detected
+  (never silent), and the stream carries enough to rebuild the
+  ``summarize_*`` totals (the cross-check) on a faulted Facebook-4DC run.
+"""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.facebook_4dc import PaperSimConfig, make_sim_builder
+from repro.core.baselines import (
+    data_dispatch,
+    greedy_cost_dispatch,
+    jsq_dispatch,
+    random_dispatch,
+    static_placement_rule,
+)
+from repro.core.gmsa import dispatch_fn, gmsa_policy
+from repro.core.simulator import simulate, summarize
+from repro.jobs import simulate_staged, summarize_staged
+from repro.jobs.dag import single_stage_dag
+from repro.placement import (
+    PlacementConfig,
+    make_adaptive_rule,
+    simulate_placed,
+    summarize_placed,
+    wan_topology,
+)
+from repro.telemetry import (
+    EV_EPOCH,
+    EV_RECOVERY,
+    OFF,
+    SUMMARY,
+    TRACE,
+    TelemetryConfig,
+    collect_records,
+    cross_check,
+    read_jsonl,
+    render_timeline,
+    ring_events,
+    ring_init,
+    ring_push,
+    switch_events,
+    time_to_slo,
+    write_jsonl,
+)
+from repro.telemetry import report as report_cli
+from repro.traces.bandwidth import bandwidth_draw
+from repro.traces.faults import scheduled_failure_trace
+
+POLICIES = [
+    pytest.param(dispatch_fn(1.0), id="gmsa"),
+    pytest.param(data_dispatch, id="data"),
+    pytest.param(random_dispatch, id="random"),
+    pytest.param(jsq_dispatch, id="jsq"),
+    pytest.param(greedy_cost_dispatch, id="greedy"),
+]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(PaperSimConfig(), t_slots=96)
+    template, build = make_sim_builder(cfg)
+    root = jax.random.key(cfg.trace_seed)
+    up, down = bandwidth_draw(jax.random.split(root, 6)[2], cfg.n_sites)
+    return cfg, template, up, down
+
+
+@pytest.fixture(scope="module")
+def faulted_placed(setup):
+    """One faulted Facebook-4DC controller run, bare + TRACE."""
+    cfg, template, up, down = setup
+    mask = scheduled_failure_trace(cfg.t_slots, cfg.n_sites, [(1, 30, None)])
+    pcfg = PlacementConfig(epoch_slots=24, manager_share=cfg.manager_share,
+                           map_share=cfg.map_share)
+    pol, rule, key = dispatch_fn(1.0), make_adaptive_rule(up), jax.random.key(3)
+    bare = simulate_placed(template, up, down, pol, rule, key, pcfg,
+                           alive=mask)
+    tcfg = TelemetryConfig(level=TRACE)
+    traced, frame = simulate_placed(template, up, down, pol, rule, key, pcfg,
+                                    alive=mask, telemetry=tcfg)
+    return bare, traced, frame, tcfg
+
+
+# ---------------------------------------------------------------------------
+# The event ring
+# ---------------------------------------------------------------------------
+
+def test_ring_push_order_and_masking():
+    ring = ring_init(4)
+    ring = ring_push(ring, True, 3, EV_RECOVERY, (1.0, 2.0))
+    ring = ring_push(ring, False, 4, EV_EPOCH, (9.0,))     # masked: no-op
+    ring = ring_push(ring, True, 7, EV_EPOCH, (5.0,))
+    events, dropped = ring_events(ring)
+    assert dropped == 0
+    assert [(e["t"], e["code"]) for e in events] == [(3, EV_RECOVERY),
+                                                     (7, EV_EPOCH)]
+    np.testing.assert_allclose(events[0]["val"][:2], [1.0, 2.0])
+    # The masked push left the buffer bitwise untouched.
+    assert int(ring.count) == 2
+
+
+def test_ring_wraparound_reports_dropped():
+    ring = ring_init(2)
+    for t in range(5):
+        ring = ring_push(ring, True, t, EV_EPOCH, (float(t),))
+    events, dropped = ring_events(ring)
+    assert dropped == 3
+    assert [e["t"] for e in events] == [3, 4]              # newest survive
+
+
+def test_ring_push_inside_scan():
+    def body(ring, t):
+        return ring_push(ring, t % 2 == 0, t, EV_EPOCH, (t.astype(jnp.float32),)), None
+
+    ring, _ = jax.lax.scan(body, ring_init(8), jnp.arange(6))
+    events, dropped = ring_events(ring)
+    assert dropped == 0
+    assert [e["t"] for e in events] == [0, 2, 4]
+
+
+# ---------------------------------------------------------------------------
+# OFF is free: byte-identical jaxprs (the PR-4 fast path survives)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_simulate_off_jaxpr_identical(setup, policy):
+    _, template, _, _ = setup
+    key = jax.random.key(0)
+    j_none = jax.make_jaxpr(lambda i, k: simulate(i, policy, k))(template, key)
+    j_off = jax.make_jaxpr(
+        lambda i, k: simulate(i, policy, k, telemetry=TelemetryConfig(level=OFF))
+    )(template, key)
+    assert str(j_none) == str(j_off)
+
+
+def test_simulate_placed_off_jaxpr_identical(setup):
+    cfg, template, up, down = setup
+    mask = scheduled_failure_trace(cfg.t_slots, cfg.n_sites, [(1, 30, None)])
+    pcfg = PlacementConfig(epoch_slots=24, manager_share=cfg.manager_share,
+                           map_share=cfg.map_share)
+    pol, rule = dispatch_fn(1.0), make_adaptive_rule(up)
+    key = jax.random.key(3)
+
+    def bare(i, k):
+        return simulate_placed(i, up, down, pol, rule, k, pcfg, alive=mask)
+
+    def off(i, k):
+        return simulate_placed(i, up, down, pol, rule, k, pcfg, alive=mask,
+                               telemetry=TelemetryConfig(level=OFF))
+
+    assert (str(jax.make_jaxpr(bare)(template, key))
+            == str(jax.make_jaxpr(off)(template, key)))
+
+
+def test_simulate_staged_off_jaxpr_identical(setup):
+    cfg, template, up, down = setup
+    dag = single_stage_dag(cfg.k_types)
+    wan = wan_topology(up, down)
+    key = jax.random.key(0)
+
+    def bare(i, k):
+        return simulate_staged(i, dag, wan, data_dispatch, k)
+
+    def off(i, k):
+        return simulate_staged(i, dag, wan, data_dispatch, k,
+                               telemetry=TelemetryConfig(level=OFF))
+
+    assert (str(jax.make_jaxpr(bare)(template, key))
+            == str(jax.make_jaxpr(off)(template, key)))
+
+
+# ---------------------------------------------------------------------------
+# TRACE observes without disturbing: outputs stay bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_simulate_trace_outputs_bitwise(setup, policy):
+    cfg, template, _, _ = setup
+    key = jax.random.key(7)
+    o0 = simulate(template, policy, key)
+    o1, frame = simulate(template, policy, key,
+                         telemetry=TelemetryConfig(level=TRACE))
+    for f in o0._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(o0, f)),
+                                      np.asarray(getattr(o1, f)), err_msg=f)
+    assert frame.metrics["q_site"].shape == (cfg.t_slots, cfg.n_sites)
+
+
+def test_simulate_placed_trace_outputs_bitwise(faulted_placed):
+    bare, traced, frame, _ = faulted_placed
+    for f in bare._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(bare, f)),
+                                      np.asarray(getattr(traced, f)),
+                                      err_msg=f)
+
+
+def test_simulate_staged_trace_outputs_bitwise(setup):
+    cfg, template, up, down = setup
+    dag = single_stage_dag(cfg.k_types)
+    wan = wan_topology(up, down)
+    key = jax.random.key(7)
+    s0 = simulate_staged(template, dag, wan, random_dispatch, key)
+    s1, frame = simulate_staged(template, dag, wan, random_dispatch, key,
+                                telemetry=TelemetryConfig(level=TRACE))
+    for f in s0._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(s0, f)),
+                                      np.asarray(getattr(s1, f)), err_msg=f)
+    # The per-stage WAN split re-sums to the fused per-slot bill.
+    np.testing.assert_allclose(
+        np.asarray(frame.metrics["stage_wan_cost"]).sum(-1),
+        np.asarray(s1.wan_cost), rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(frame.metrics["stage_wan_gb"]).sum(-1),
+        np.asarray(s1.wan_gb), rtol=1e-4, atol=1e-6)
+
+
+def test_summary_level_has_metrics_but_no_ring_events(setup):
+    cfg, template, up, down = setup
+    mask = scheduled_failure_trace(cfg.t_slots, cfg.n_sites, [(1, 30, None)])
+    pcfg = PlacementConfig(epoch_slots=24, manager_share=cfg.manager_share,
+                           map_share=cfg.map_share)
+    _, frame = simulate_placed(
+        template, up, down, dispatch_fn(1.0), make_adaptive_rule(up),
+        jax.random.key(3), pcfg, alive=mask,
+        telemetry=TelemetryConfig(level=SUMMARY),
+    )
+    assert frame.metrics["q_site"].shape == (cfg.t_slots, cfg.n_sites)
+    events, dropped = ring_events(frame.ring)
+    assert events == [] and dropped == 0
+
+
+# ---------------------------------------------------------------------------
+# The acceptance run: faulted Facebook-4DC stream rebuilds summarize_placed
+# ---------------------------------------------------------------------------
+
+def test_faulted_stream_has_recovery_and_epoch_events(faulted_placed):
+    _, _, frame, _ = faulted_placed
+    events, dropped = ring_events(frame.ring)
+    assert dropped == 0
+    codes = [e["code"] for e in events]
+    assert EV_RECOVERY in codes
+    assert EV_EPOCH in codes
+    rec = next(e for e in events if e["code"] == EV_RECOVERY)
+    assert rec["t"] == 30                       # the scheduled death edge
+    assert rec["val"][0] > 0.0                  # evacuated GB
+
+
+def test_faulted_stream_cross_checks_summarize_placed(faulted_placed):
+    _, traced, frame, tcfg = faulted_placed
+    records = collect_records(traced, frame, cfg=tcfg,
+                              summary=summarize_placed(traced))
+    res = cross_check(records)
+    assert res["ok"], res
+    for name in ("dispatch_cost", "wan_cost", "sync_cost",
+                 "recovery_cost", "recovery_gb", "total_cost"):
+        assert res["checks"][name]["ok"], res["checks"]
+    # Recovery events carry the SLO clock.
+    rec = next(r for r in records
+               if r.get("type") == "event" and r.get("code") == "recovery")
+    assert "time_to_slo" in rec and rec["slo_backlog"] > 0.0
+
+
+def test_staged_stream_cross_checks_summarize_staged(setup):
+    cfg, template, up, down = setup
+    dag = single_stage_dag(cfg.k_types)
+    wan = wan_topology(up, down)
+    tcfg = TelemetryConfig(level=TRACE)
+    outs, frame = simulate_staged(template, dag, wan, random_dispatch,
+                                  jax.random.key(7), telemetry=tcfg)
+    records = collect_records(outs, frame, cfg=tcfg,
+                              summary=summarize_staged(outs))
+    res = cross_check(records)
+    assert res["ok"], res
+
+
+def test_sim_stream_cross_checks_summarize(setup):
+    _, template, _, _ = setup
+    tcfg = TelemetryConfig(level=TRACE)
+    outs, frame = simulate(template, dispatch_fn(1.0), jax.random.key(7),
+                           telemetry=tcfg)
+    records = collect_records(outs, frame, cfg=tcfg, summary=summarize(outs))
+    res = cross_check(records)
+    assert res["ok"], res
+
+
+def test_collect_refuses_monte_carlo_axis(faulted_placed):
+    bare, *_ = faulted_placed
+    stacked = bare._replace(
+        cost=jnp.stack([bare.cost, bare.cost]),
+    )
+    with pytest.raises(ValueError, match="ONE run"):
+        collect_records(stacked)
+
+
+# ---------------------------------------------------------------------------
+# Derived events + SLO clock
+# ---------------------------------------------------------------------------
+
+def test_switch_events_flag_argmax_edges():
+    f = np.zeros((3, 2, 1), np.float32)
+    f[0, 0, 0] = 1.0
+    f[1, 1, 0] = 1.0                              # switch at t=1: 0 -> 1
+    f[2, 1, 0] = 1.0                              # no switch
+    evs = switch_events(f)
+    assert len(evs) == 1
+    assert evs[0] == {"type": "event", "t": 1, "code": "switch",
+                      "k": 0, "src": 0, "dst": 1}
+
+
+def test_time_to_slo_derived_threshold():
+    backlog = np.concatenate([np.full(12, 2.0), [9.0, 8.0, 2.9, 2.0]])
+    slots, thr = time_to_slo(backlog, 12, TelemetryConfig())
+    assert thr == pytest.approx(3.0)              # 1.5 x pre-fault mean 2.0
+    assert slots == 2                             # 9, 8, then 2.9 <= 3.0
+    stuck = np.concatenate([np.full(12, 2.0), np.full(8, 9.0)])
+    never, _ = time_to_slo(stuck, 12, TelemetryConfig())
+    assert never is None                          # 9 > 3.0 forever
+    abs_slots, abs_thr = time_to_slo(
+        backlog, 12, TelemetryConfig(slo_backlog=8.5))
+    assert abs_thr == 8.5 and abs_slots == 1
+
+
+# ---------------------------------------------------------------------------
+# Export round trip + the report CLI
+# ---------------------------------------------------------------------------
+
+def test_jsonl_round_trip(tmp_path, faulted_placed):
+    _, traced, frame, tcfg = faulted_placed
+    records = collect_records(traced, frame, cfg=tcfg,
+                              summary=summarize_placed(traced))
+    path = write_jsonl(records, tmp_path / "run.jsonl")
+    assert read_jsonl(path) == json.loads(json.dumps(records))
+
+
+def test_render_timeline_mentions_the_death_edge(faulted_placed):
+    _, traced, frame, tcfg = faulted_placed
+    records = collect_records(traced, frame, cfg=tcfg,
+                              summary=summarize_placed(traced))
+    text = render_timeline(records, codes={"recovery", "epoch"})
+    assert "death edge" in text and "evacuated" in text
+    assert "engine=placed" in text
+
+
+def test_report_cli_check_exit_codes(tmp_path, faulted_placed):
+    _, traced, frame, tcfg = faulted_placed
+    records = collect_records(traced, frame, cfg=tcfg,
+                              summary=summarize_placed(traced))
+    good = write_jsonl(records, tmp_path / "good.jsonl")
+    assert report_cli.main([str(good), "--check"]) == 0
+    # Corrupt the embedded summary: the cross-check must catch it.
+    bad_records = [dict(r) for r in records]
+    for r in bad_records:
+        if r["type"] == "summary":
+            r["time_avg_total_cost"] *= 2.0
+    bad = write_jsonl(bad_records, tmp_path / "bad.jsonl")
+    assert report_cli.main([str(bad), "--check"]) == 1
+
+
+def test_dropped_events_fail_the_cross_check(faulted_placed):
+    _, traced, frame, tcfg = faulted_placed
+    records = collect_records(traced, frame, cfg=tcfg,
+                              summary=summarize_placed(traced))
+    records[0]["events_dropped"] = 3
+    res = cross_check(records)
+    assert not res["ok"]
+    assert "dropped" in res["error"]
+
+
+def test_tiny_capacity_overflows_and_is_detected(setup):
+    cfg, template, up, down = setup
+    mask = scheduled_failure_trace(cfg.t_slots, cfg.n_sites, [(1, 30, None)])
+    pcfg = PlacementConfig(epoch_slots=24, manager_share=cfg.manager_share,
+                           map_share=cfg.map_share)
+    _, frame = simulate_placed(
+        template, up, down, dispatch_fn(1.0), make_adaptive_rule(up),
+        jax.random.key(3), pcfg, alive=mask,
+        telemetry=TelemetryConfig(level=TRACE, capacity=2),
+    )
+    events, dropped = ring_events(frame.ring)
+    assert len(events) == 2 and dropped > 0
