@@ -1,0 +1,144 @@
+"""Serving control-plane benchmark: FleetEngine on the simulation stack.
+
+Times the unified serving loop (staged prefill→decode dispatch, replica-
+read routing, admission control) in dispatch-only mode, asserts the two
+invariants the refactor introduced, and exercises the fleet-scale kernel
+path:
+
+* **replay parity** — a dispatch-only ``FleetEngine.run`` must agree with
+  ``simulate_staged`` on the shared :class:`repro.serve.engine.ServeScenario`:
+  per-slot dispatch choices bit-for-bit, total billed cost (compute $ +
+  KV-handoff WAN $) to float tolerance.
+* **request conservation** — admitted arrivals = completed + final
+  backlog per class (the served-vs-billed accounting fix).
+* **fleet grid** — an N = 256 pod grid from
+  :func:`repro.configs.fleet_256.make_serve_grid` where every slot's
+  decision runs through ``gmsa_dispatch(impl="kernel")`` (interpret mode
+  on CPU/CI).
+
+``--quick`` is the tier-1 CI step: dispatch-only, n_pods = 8, a few
+slots of the kernel grid. The full run adds a real-execution row
+(prefill+decode for drained jobs) on the smoke models.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_arch
+from repro.configs.fleet_256 import FleetConfig as GridConfig
+from repro.configs.fleet_256 import make_serve_grid
+from repro.jobs.engine import simulate_staged
+from repro.launch.serve import build_engine
+from repro.serve.engine import FleetConfig, FleetEngine, RequestClass, serve_policy
+
+
+def _timed_run(engine: FleetEngine, execute_real: bool):
+    t0 = time.perf_counter()
+    out = engine.run(execute_real=execute_real)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def _assert_parity(engine: FleetEngine, out: dict):
+    """Dispatch-only replay vs simulate_staged on the shared scenario."""
+    scn = engine.scenario
+    pol = serve_policy(engine.fcfg, scn)
+    outs = simulate_staged(
+        scn.inputs, scn.dag, scn.wan, pol, jax.random.key(0), engine.fcfg.v
+    )
+    assert np.array_equal(out["dispatch"], np.asarray(outs.f_trace)), (
+        "serving dispatch trace diverged from simulate_staged"
+    )
+    sim_total = float(
+        np.asarray(outs.cost).sum() + np.asarray(outs.wan_cost).sum()
+    )
+    assert np.isclose(out["total_billed_cost"], sim_total, rtol=1e-5), (
+        f"billed cost diverged: engine {out['total_billed_cost']} "
+        f"vs simulator {sim_total}"
+    )
+
+
+def _assert_conservation(out: dict):
+    adm = out["admitted"].sum(axis=0)
+    comp = out["completed"].sum(axis=0)
+    qf = out["q_final"].sum(axis=(0, 2))
+    assert np.allclose(adm, comp + qf, atol=1e-3), (
+        f"request conservation violated: admitted {adm} != "
+        f"completed {comp} + backlog {qf}"
+    )
+    assert np.allclose(
+        out["raw_arrivals"], out["admitted"] + out["rejected"]
+    ), "admission split is not exact"
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--quick", action="store_true",
+        help="dispatch-only smoke version (CI tier-1 step)",
+    )
+    args, _ = parser.parse_known_args(argv)
+
+    slots = 16 if args.quick else 32
+
+    # -- staged dispatch, 8 pods (the capacity_shares-derivation regression).
+    eng = build_engine(
+        ["qwen2-0.5b"], slots, v=1.0, seed=3, arrival=6.0,
+        n_pods=8, admit_max=10.0,
+    )
+    out, us = _timed_run(eng, execute_real=False)
+    _assert_parity(eng, out)
+    _assert_conservation(out)
+    emit(
+        f"serve_staged_8pods_{slots}slots", us,
+        f"mean_cost={out['mean_cost']:.3e};"
+        f"wan_cost={out['wan_cost'].sum():.3e};"
+        f"backlog={out['final_backlog']:.1f};"
+        f"admitted={out['admitted'].sum():.0f};"
+        f"rejected={out['rejected'].sum():.0f}",
+    )
+
+    # -- fleet-scale kernel dispatch: N = 256 pod grid through the Pallas
+    #    path (interpret on CPU).
+    grid_slots = 4 if args.quick else 8
+    gc = GridConfig()
+    omega, pue, r, up, down, layout, shares = make_serve_grid(gc, 2, grid_slots)
+    rcs = [
+        RequestClass(name=a, cfg=get_arch(a, "smoke"),
+                     energy_cfg=get_arch(a, "full"), arrival_rate=40.0)
+        for a in ["qwen2-0.5b", "mamba2-2.7b"]
+    ]
+    fc = FleetConfig(
+        n_pods=gc.n_sites, horizon_slots=grid_slots, v=gc.v, seed=1,
+        capacity_shares=shares, dispatch="kernel", admit_max=64.0,
+    )
+    keng = FleetEngine(fc, rcs, omega, pue, r, up=up, down=down, layout=layout)
+    kout, kus = _timed_run(keng, execute_real=False)
+    _assert_conservation(kout)
+    emit(
+        f"serve_kernel_{gc.n_sites}pods_{grid_slots}slots", kus,
+        f"mean_cost={kout['mean_cost']:.3e};"
+        f"backlog={kout['final_backlog']:.1f};"
+        f"admitted={kout['admitted'].sum():.0f}",
+    )
+
+    if not args.quick:
+        # -- real execution: drained jobs run prefill+decode (smoke models).
+        ex = build_engine(["qwen2-0.5b"], 8, v=1.0, seed=3, arrival=4.0)
+        xout, xus = _timed_run(ex, execute_real=True)
+        emit(
+            "serve_exec_4pods_8slots", xus,
+            f"exec_jobs={xout['exec_jobs']};"
+            f"exec_seconds={xout['exec_seconds']:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    main()
+    from benchmarks.common import write_bench_json
+    write_bench_json(label="serve_bench")

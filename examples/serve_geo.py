@@ -5,13 +5,18 @@ Two request classes (two architectures from the assigned pool, smoke-scale),
 Poisson request arrivals, four pods with heterogeneous capacity and
 price/PUE traces. Every slot:
 
-  1. the front-end observes queues + per-pod energy cost (PUE × price ×
-     Iridium fan-out) and runs GMSA to pick each class's manager pod;
+  1. each class's prefill routes through the placement layer's
+     replica-read mix over the drawn dataset layout, and the joint stage
+     scheduler places the decode stage (KV handoff billed via the WAN
+     model) by drift-plus-penalty;
   2. drained requests execute REAL batched prefill + decode steps;
-  3. queues update by the paper's Eq. (1).
+  3. per-stage queues update by the staged generalization of Eq. (1) —
+     the same slot body `simulate_staged` scans, so a dispatch-only run
+     replays the simulator bit-for-bit.
 
-A second pass with V=100 shows the cost/backlog trade-off live, and a
-dispatch-only RANDOM pass quantifies GMSA's savings.
+A second pass with V=100 shows the cost/backlog trade-off live
+(serving energy is kWh-scale, so dispatch is nearly V-insensitive —
+the drift term dominates).
 
     PYTHONPATH=src python examples/serve_geo.py
 """
@@ -33,12 +38,14 @@ def main():
     print(f"final backlog         : {out['final_backlog']:.0f} requests")
     print(f"model execution time  : {out['exec_seconds']:.1f}s "
           f"(batched prefill+decode on CPU)")
-    share = out["dispatch"].mean(axis=0).sum(axis=1)
+    print(f"KV-handoff WAN bill   : {out['wan_cost'].sum():.3e} $ "
+          f"({out['wan_gb'].sum():.2f} GB)")
+    share = out["dispatch"].mean(axis=0).sum(axis=(1, 2))
     print(f"dispatch share per pod: {np.round(share / share.sum(), 3)}")
 
     # Per-slot timeline straight from the engine's history records —
-    # manager choice per class, pod queue depths, IT Joules per class.
-    print("\nslot timeline (manager pod per class | pod queue depths | J):")
+    # decode pod per class, pod queue depths, served-priced IT Joules.
+    print("\nslot timeline (decode pod per class | pod queue depths | J):")
     for h in out["history"]:
         choices = " ".join(
             f"{c}->pod{p}" for c, p in zip(classes, h["choice"])
@@ -56,7 +63,8 @@ def main():
 
     print("\nThe cheap/cool pods (Luleå-like) absorb most requests until their")
     print("queues push back — the paper's drift-plus-penalty balance, applied")
-    print("to real transformer serving.")
+    print("to real transformer serving. Per-job energy is kWh-scale, so the")
+    print("V sweep barely moves cost: the drift (queueing) term dominates.")
 
 
 if __name__ == "__main__":

@@ -158,3 +158,39 @@ def make_fleet_builder(
         return template._replace(arrivals=arrivals, mu=mu)
 
     return template, build_inputs
+
+
+def make_serve_grid(cfg: FleetConfig, k_classes: int, slots: int):
+    """The fleet scenario re-cut as a SERVING pod grid.
+
+    Returns ``(omega, pue, r, up, down, layout, shares)`` — everything
+    :class:`repro.serve.engine.FleetEngine` needs to run an N = 256 pod
+    grid: the same seeded site climates and backbone as the batch
+    scenario, a ``k_classes``-dataset layout (the KV-prefix placement the
+    replica-read router serves prefill from), Iridium ratios over it, and
+    the Dirichlet capacity shares (summing to ``cfg.headroom`` of offered
+    load) to hand to ``FleetConfig.capacity_shares``. With
+    ``dispatch="kernel"`` the engine's per-slot decision then runs
+    through ``gmsa_dispatch(impl="kernel")`` — the Pallas path this grid
+    was tiled for (interpret mode on CPU/CI).
+    """
+    root = jax.random.key(cfg.trace_seed)
+    k_price, k_pue, k_bw, k_data, _, _ = jax.random.split(root, 6)
+    sites = fleet_sites(cfg)
+    omega = np.asarray(price_trace(k_price, slots, cfg.slot_minutes, sites))
+    pue = np.asarray(pue_trace(k_pue, slots, cfg.slot_minutes, sites))
+    up, down = bandwidth_draw(
+        k_bw, cfg.n_sites, lo=cfg.bw_lo_gbps, hi=cfg.bw_hi_gbps
+    )
+    layout = dataset_distribution(
+        k_data, k_classes, cfg.n_sites, conc=cfg.dataset_conc
+    )
+    r = np.asarray(build_task_allocation(
+        layout, up, down,
+        size=1.0, manager_share=cfg.manager_share, map_share=cfg.map_share,
+    ))
+    rng = np.random.default_rng(cfg.trace_seed + 1)
+    shares = tuple(
+        float(s) for s in rng.dirichlet(np.full(cfg.n_sites, 2.0)) * cfg.headroom
+    )
+    return omega, pue, r, up, down, layout, shares

@@ -67,6 +67,93 @@ from repro.telemetry.ring import TelemetryFrame, ring_init
 _EPS = 1e-12
 
 
+def staged_slot_update(
+    dag: StageDag,
+    q: Array,
+    ret,
+    arrivals: Array,
+    mu_stages: Array,
+    returns_flow: bool,
+) -> tuple[Array, Array, Array, Array]:
+    """One slot of the staged engine: tandem flow + Eq. 1 for every stage.
+
+    ``ret`` is the policy's output — ``(f, in_stack)`` for ``returns_flow``
+    policies (the stage-aware scheduler already walked the within-slot flow
+    via :func:`repro.jobs.scheduler.flow_step`), bare ``f`` otherwise (the
+    recursion is replayed here). This is the SINGLE definition of the
+    per-slot staged update: :func:`simulate_staged`'s scan body calls it,
+    and :class:`repro.serve.engine.FleetEngine`'s serving loop calls it on
+    live traffic — which is what makes a dispatch-only serving run replay
+    bit-for-bit against the simulator on a shared scenario.
+
+    Returns:
+        (q_next, f, acc, in_stack): the advanced (N, K, S) queues, the
+        dispatch decision, the landed mass ``q + f·in`` (the inside of
+        Eq. 1's max) and the (K, S) per-stage inflows.
+    """
+    s_max = dag.s_max
+    if returns_flow:
+        f, in_stack = ret
+        acc = q + f * in_stack[None, :, :]                         # (N, K, S)
+    else:
+        f = ret
+        total_in = arrivals                                        # (K,)
+        ins, accs = [], []
+        for s in range(s_max):
+            ins.append(total_in)
+            acc_s = q[:, :, s] + f[:, :, s] * total_in[None, :]
+            accs.append(acc_s)
+            if s + 1 < s_max:
+                done_s = jnp.minimum(acc_s, mu_stages[:, :, s])
+                total_in = (jnp.sum(done_s, axis=0)
+                            * dag.stage_mask[:, s + 1])
+        acc = jnp.stack(accs, axis=-1)                             # (N, K, S)
+        in_stack = jnp.stack(ins, axis=-1)                         # (K, S)
+
+    # Eq. 1 for ALL stages at once, the stage axis folded into the
+    # type axis (one queue per (DC, type·stage)). The expression is
+    # ``slot_step``'s own — ``max((q + fa) - mu, 0)`` — and for S = 1
+    # every reshape is the identity, keeping the single-stage path
+    # bitwise the base engine's.
+    q_next = jnp.maximum(acc - mu_stages, 0.0)
+    return q_next, f, acc, in_stack
+
+
+def staged_shuffle_mixes(
+    f_trace: Array,
+    in_all: Array,
+    done_all: Array,
+    dd_all: Array,
+    dag: StageDag,
+) -> tuple[Array, Array, Array]:
+    """Source/destination mixes + volumes for every (slot, stage) shuffle.
+
+    Vectorized over the whole horizon from the stacked per-slot outputs:
+    stage 0 pulls from ``data_dist``; stage s > 0 pulls from where stage
+    s-1's completions actually ran (uniform fallback for zero flow — the
+    volume is zero there, so the choice is billing-inert, the same
+    ``flow_step`` contract the policy lookahead uses).
+
+    Returns:
+        (src, dst, vol): (T, S, K, N), (T, S, K, N), (T, S, K).
+    """
+    t_slots, n = f_trace.shape[0], f_trace.shape[1]
+    s_max = dag.s_max
+    td_all = jnp.sum(done_all, axis=1)                             # (T,K,S)
+    if s_max == 1:
+        src_all = dd_all[:, None]                                  # (T,1,K,N)
+    else:
+        done_up = done_all[:, :, :, :-1].transpose(0, 3, 2, 1)     # (T,S-1,K,N)
+        td_up = td_all[:, :, :-1].transpose(0, 2, 1)[..., None]    # (T,S-1,K,1)
+        src_up = jnp.where(
+            td_up > _EPS, done_up / jnp.maximum(td_up, _EPS), 1.0 / n
+        )                                                          # (T,S-1,K,N)
+        src_all = jnp.concatenate([dd_all[:, None], src_up], axis=1)
+    dst_all = f_trace.transpose(0, 3, 2, 1)                        # (T,S,K,N)
+    vol_all = (in_all * dag.shuffle_gb[None]).transpose(0, 2, 1)   # (T,S,K)
+    return src_all, dst_all, vol_all
+
+
 class StagedOutputs(NamedTuple):
     """Per-slot traces of one staged run (leading runs axis under vmap)."""
 
@@ -188,41 +275,20 @@ def simulate_staged(
             (ret,) = rest
 
         # Within-slot tandem flow — the only genuinely sequential part,
-        # stripped to its recursion: per stage, the inflow lands on the
-        # backlog (acc = Q + f·F, the inside of Eq. 1's max — exactly
-        # ``slot_step``'s ``q + fa``), completions are min(acc, mu), and
-        # their total seeds the next stage. Policies that walked this
-        # exact chain already (``returns_flow = True`` — the stage-aware
-        # scheduler's lookahead shares flow_step's definition) export the
-        # per-stage inflows and the recursion is skipped entirely.
-        # Everything derivable from (f, acc, ins) — cost/energy accrual,
-        # backlogs, source mixes, shuffle volumes, completions, the WAN
-        # bill — is recomputed vectorized over all T slots AFTER the
-        # scan, keeping the per-slot body minimal.
-        if returns_flow:
-            f, in_stack = ret
-            acc = q + f * in_stack[None, :, :]                     # (N, K, S)
-        else:
-            f = ret
-            total_in = arrivals                                    # (K,)
-            ins, accs = [], []
-            for s in range(s_max):
-                ins.append(total_in)
-                acc_s = q[:, :, s] + f[:, :, s] * total_in[None, :]
-                accs.append(acc_s)
-                if s + 1 < s_max:
-                    done_s = jnp.minimum(acc_s, mu_stages[:, :, s])
-                    total_in = (jnp.sum(done_s, axis=0)
-                                * dag.stage_mask[:, s + 1])
-            acc = jnp.stack(accs, axis=-1)                         # (N, K, S)
-            in_stack = jnp.stack(ins, axis=-1)                     # (K, S)
-
-        # Eq. 1 for ALL stages at once, the stage axis folded into the
-        # type axis (one queue per (DC, type·stage)). The expression is
-        # ``slot_step``'s own — ``max((q + fa) - mu, 0)`` — and for S = 1
-        # every reshape is the identity, keeping the single-stage path
-        # bitwise the base engine's.
-        q_next = jnp.maximum(acc - mu_stages, 0.0)
+        # stripped to its recursion via the shared :func:`staged_slot_update`
+        # (acc = Q + f·F is the inside of Eq. 1's max — exactly
+        # ``slot_step``'s ``q + fa``; completions min(acc, mu) seed the next
+        # stage). Policies that walked this exact chain already
+        # (``returns_flow = True`` — the stage-aware scheduler's lookahead
+        # shares flow_step's definition) export the per-stage inflows and
+        # the recursion is skipped entirely. Everything derivable from
+        # (f, acc, ins) — cost/energy accrual, backlogs, source mixes,
+        # shuffle volumes, completions, the WAN bill — is recomputed
+        # vectorized over all T slots AFTER the scan, keeping the per-slot
+        # body minimal.
+        q_next, f, acc, in_stack = staged_slot_update(
+            dag, q, ret, arrivals, mu_stages, returns_flow
+        )
 
         out = (f, acc, in_stack)
         return ((q_next, key) if keyed else q_next), out
@@ -266,17 +332,9 @@ def simulate_staged(
         if dd_varying
         else jnp.broadcast_to(inputs.data_dist, (t_slots, k_types, n))
     )                                                              # (T, K, N)
-    if s_max == 1:
-        src_all = dd_all[:, None]                                  # (T,1,K,N)
-    else:
-        done_up = done_all[:, :, :, :-1].transpose(0, 3, 2, 1)     # (T,S-1,K,N)
-        td_up = td_all[:, :, :-1].transpose(0, 2, 1)[..., None]    # (T,S-1,K,1)
-        src_up = jnp.where(
-            td_up > _EPS, done_up / jnp.maximum(td_up, _EPS), 1.0 / n
-        )                                                          # (T,S-1,K,N)
-        src_all = jnp.concatenate([dd_all[:, None], src_up], axis=1)
-    dst_all = f_trace.transpose(0, 3, 2, 1)                        # (T,S,K,N)
-    vol_all = (in_all * dag.shuffle_gb[None]).transpose(0, 2, 1)   # (T,S,K)
+    src_all, dst_all, vol_all = staged_shuffle_mixes(
+        f_trace, in_all, done_all, dd_all, dag
+    )
     wan_c, wan_e, wan_gb = plan_cost(
         src_all.reshape(t_slots, s_max * k_types, n),
         dst_all.reshape(t_slots, s_max * k_types, n),

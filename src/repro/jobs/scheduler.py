@@ -208,16 +208,24 @@ def stage_oblivious(policy, pin_map: bool = False):
 
     Args:
         policy: any base policy ``(key, q(N,K), arrivals, mu, e, aux,
-            scalar) -> f(N,K)``.
+            scalar) -> f(N,K)``. Policies declaring ``wants_wpue = True``
+            (the Pallas-kernel dispatch of
+            :func:`repro.core.gmsa.make_kernel_policy`) receive the full
+            ``(data_dist, omega*PUE)`` aux pair, exactly as
+            :func:`repro.core.simulator.simulate` hands it to them — the
+            staged engines always carry ``wpue``, so the fleet-scale kernel
+            path composes with stage-structured queues unchanged.
         pin_map: override stage 0 with data-local map placement (used when
             benchmarking against stage-aware policies under the same
             data-local-map premise; keep False for exact base semantics).
     """
+    wants_wpue = getattr(policy, "wants_wpue", False)
 
     def staged(key, q, arrivals, mu, e, aux, scalar):
-        data_dist, _ = aux
+        data_dist, wpue = aux
+        base_aux = (data_dist, wpue) if wants_wpue else data_dist
         q_total = jnp.sum(q, axis=-1)                              # (N, K)
-        f_base = policy(key, q_total, arrivals, mu, e, data_dist, scalar)
+        f_base = policy(key, q_total, arrivals, mu, e, base_aux, scalar)
         f = jnp.broadcast_to(f_base[:, :, None], q.shape)
         if pin_map:
             f = jnp.concatenate(

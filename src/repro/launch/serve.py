@@ -1,11 +1,16 @@
-"""Serving launcher: the GMSA-dispatched fleet engine on real (small) models.
+"""Serving launcher: the simulation-dispatched fleet engine on real models.
 
   PYTHONPATH=src python -m repro.launch.serve --slots 24 --v 1.0 \
-      [--classes qwen2-0.5b,granite-3-2b] [--no-exec]
+      [--classes qwen2-0.5b,granite-3-2b] [--no-exec] [--pods 8] \
+      [--admit-max 6] [--kill "2:12"] [--dispatch kernel]
 
-Each request class is an architecture (smoke variant on this container);
-dispatch decisions per slot come from repro.core.gmsa against per-pod
-price/PUE traces; drained jobs actually execute prefill+decode.
+Each request class is an architecture (smoke variant on this container)
+modeled as a 2-stage prefill→decode chain; prefill routes through the
+placement layer's replica-read assignment over a drawn dataset layout,
+every slot dispatches through the joint stage scheduler (or the Pallas
+kernel path with ``--dispatch kernel``), and drained jobs actually
+execute prefill+decode. ``--kill pod:slot`` injects a pod death — the
+recovery drain shows up in the history/telemetry stream.
 """
 
 from __future__ import annotations
@@ -25,23 +30,34 @@ from repro.traces.pue import pue_trace
 
 
 def build_engine(classes: list[str], slots: int, v: float, seed: int = 0,
-                 arrival: float = 6.0) -> FleetEngine:
-    n_pods = 4
+                 arrival: float = 6.0, n_pods: int = 4,
+                 admit_max: float | None = None, dispatch: str = "staged",
+                 alive: np.ndarray | None = None) -> FleetEngine:
     key = jax.random.key(seed)
     k1, k2, k3, k4 = jax.random.split(key, 4)
-    omega = np.asarray(price_trace(k1, slots, 5.0, FACEBOOK_SITES))
-    pue = np.asarray(pue_trace(k2, slots, 5.0, FACEBOOK_SITES))
+    # Pods beyond the four Facebook DCs reuse their site climates (cycled).
+    sites = tuple(FACEBOOK_SITES[i % len(FACEBOOK_SITES)]
+                  for i in range(n_pods))
+    omega = np.asarray(price_trace(k1, slots, 5.0, sites))
+    pue = np.asarray(pue_trace(k2, slots, 5.0, sites))
     rcs = [
         RequestClass(name=a, cfg=get_arch(a, "smoke"),
                      energy_cfg=get_arch(a, "full"), arrival_rate=arrival)
         for a in classes
     ]
-    dd = dataset_distribution(k3, len(rcs), n_pods)
+    # The dataset layout doubles as the KV-prefix placement the replica-
+    # read router serves prefill from; the same draw feeds the task-
+    # allocation ratios, so dispatch pricing and routing share one world.
+    layout = dataset_distribution(k3, len(rcs), n_pods)
     up, down = bandwidth_draw(k4, n_pods)
-    r = np.asarray(build_task_allocation(dd, up, down, manager_share=0.62))
+    r = np.asarray(build_task_allocation(layout, up, down, manager_share=0.62))
+    fcfg = FleetConfig(
+        n_pods=n_pods, horizon_slots=slots, v=v, seed=seed,
+        admit_max=admit_max, dispatch=dispatch,
+    )
     return FleetEngine(
-        FleetConfig(n_pods=n_pods, horizon_slots=slots, v=v, seed=seed),
-        rcs, omega, pue, r,
+        fcfg, rcs, omega, pue, r,
+        up=up, down=down, layout=layout, alive=alive,
     )
 
 
@@ -51,22 +67,48 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=24)
     ap.add_argument("--v", type=float, default=1.0)
     ap.add_argument("--arrival", type=float, default=6.0)
+    ap.add_argument("--pods", type=int, default=4)
+    ap.add_argument("--admit-max", type=float, default=None,
+                    help="per-class per-slot admission cap (default: admit all)")
+    ap.add_argument("--dispatch", choices=["staged", "kernel"],
+                    default="staged")
+    ap.add_argument("--kill", default=None, metavar="POD:SLOT",
+                    help="kill pod POD at slot SLOT (recovery drain demo)")
     ap.add_argument("--no-exec", action="store_true",
                     help="skip real model execution (dispatch-only)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    alive = None
+    if args.kill:
+        pod, slot = (int(x) for x in args.kill.split(":"))
+        alive = np.ones((args.slots, args.pods), np.float32)
+        alive[slot:, pod] = 0.0
+
     engine = build_engine(
-        args.classes.split(","), args.slots, args.v, args.seed, args.arrival
+        args.classes.split(","), args.slots, args.v, args.seed, args.arrival,
+        n_pods=args.pods, admit_max=args.admit_max, dispatch=args.dispatch,
+        alive=alive,
     )
     out = engine.run(execute_real=not args.no_exec)
-    print(f"slots={args.slots} classes={args.classes}")
+    print(f"slots={args.slots} classes={args.classes} pods={args.pods} "
+          f"dispatch={args.dispatch}")
     print(f"mean slot cost      : {out['mean_cost']:.3e} $ "
           f"({out['mean_cost']*1e6:.3f} µ$)")
+    print(f"KV-handoff WAN bill : {out['wan_cost'].sum():.3e} $ "
+          f"({out['wan_gb'].sum():.2f} GB)")
+    print(f"total billed        : {out['total_billed_cost']:.3e} $")
     print(f"final total backlog : {out['final_backlog']:.1f}")
-    print(f"model-exec seconds  : {out['exec_seconds']:.1f}")
-    share = out["dispatch"].mean(axis=0).sum(axis=1)
+    print(f"admitted/rejected   : {out['admitted'].sum():.0f} / "
+          f"{out['rejected'].sum():.0f}")
+    print(f"SLO violation frac  : {np.round(out['slo_viol_frac'], 3)}")
+    print(f"model-exec seconds  : {out['exec_seconds']:.1f} "
+          f"({out['exec_jobs']} jobs)")
+    share = out["dispatch"].mean(axis=0).sum(axis=(1, 2))
     print("dispatch share/pod  :", np.round(share / share.sum(), 3))
+    for ev in out["events"]:
+        print(f"recovery event      : pod {ev['pod']} died at t={ev['t']}, "
+              f"drained {ev['drained']:.1f} jobs")
     return out
 
 

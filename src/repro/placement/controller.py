@@ -81,7 +81,7 @@ from repro.placement.wan import (
 _EPS = 1e-12
 
 
-def _survivor_renorm(masked: Array, fallback: Array, axis: int = -1) -> Array:
+def survivor_renorm(masked: Array, fallback: Array, axis: int = -1) -> Array:
     """Renormalize a survivor-masked distribution back onto the simplex.
 
     ``masked`` is a distribution with dead sites already zeroed; rows whose
@@ -92,6 +92,9 @@ def _survivor_renorm(masked: Array, fallback: Array, axis: int = -1) -> Array:
     """
     total = jnp.sum(masked, axis=axis, keepdims=True)
     return jnp.where(total > _EPS, masked / jnp.maximum(total, _EPS), fallback)
+
+
+_survivor_renorm = survivor_renorm   # internal call sites / back-compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,10 +123,12 @@ class PlacementConfig:
             relative to the epoch-0 layout the mu trace was calibrated
             against — re-placement buys throughput, not just energy
             price. The slow rule observes the drifted layout's scale;
-            the fast loop runs under the chosen layout's scale (epoch
-            granularity — recovery re-placements inside an epoch keep the
-            epoch's scale). Off by default: the no-coupling path is
-            untouched.
+            the fast loop runs under the chosen layout's scale, and a
+            recovery re-placement inside an epoch re-derives the scale
+            per slot from the carried layout (cond-gated on the death
+            edge, like the energy rows — the epoch value would be stale:
+            evacuated data raises the survivors' I/O slowdown). Off by
+            default: the no-coupling path is untouched.
         io_compute_seconds / io_job_gb: the slowdown model's per-job
             compute time and intermediate pull volume (defaults match
             ``io_slowdown_from_bandwidth``).
@@ -426,7 +431,8 @@ def simulate_placed(
             scale_e = io_slowdown_from_bandwidth(
                 up, down, d_new, cfg.io_compute_seconds, cfg.io_job_gb
             ) / slow0                                                 # (N,)
-            mu_e = mu_e * scale_e[None, :, None]
+            mu_e_raw = mu_e          # pre-scale rows: the fault path re-
+            mu_e = mu_e * scale_e[None, :, None]   # derives from these
         else:
             scale_e = jnp.ones((n,), jnp.float32)
         r_e = jnp.where(is_first, r0, rebuild(d_new))                 # (K, N, N)
@@ -458,6 +464,8 @@ def simulate_placed(
             if faulty:
                 if tel_trace:
                     t_t, rest2 = rest2[-1], rest2[:-1]
+                if cfg.io_coupling:
+                    mu_raw_t, rest2 = rest2[-1], rest2[:-1]
                 alive_t, alive_prev_t, om_t, pu_t = rest2
                 died = alive_prev_t * (1.0 - alive_t)                 # (N,)
                 any_died = jnp.any(died > 0.5)
@@ -533,6 +541,23 @@ def simulate_placed(
                     lambda rr: (ec, er),
                     r_c,
                 )
+                if cfg.io_coupling:
+                    # The epoch-granular mu scale is derived from the
+                    # boundary layout d_new; the moment a recovery re-
+                    # places mid-epoch that scale is STALE — dead sites'
+                    # data landed on survivors, whose I/O slowdown rose.
+                    # Re-derive this slot's scale from the carried layout
+                    # (cond-gated like ec/er: no fault so far, no extra
+                    # work; fired=False is the exact identity).
+                    mu = jax.lax.cond(
+                        fired,
+                        lambda dc: mu_raw_t * (io_slowdown_from_bandwidth(
+                            up, down, dc,
+                            cfg.io_compute_seconds, cfg.io_job_gb,
+                        ) / slow0)[:, None] * alive_t[:, None],
+                        lambda dc: mu,
+                        d_c,
+                    )
                 aux = d_c
             f = policy(sub, q2, arrivals, mu, ec, aux, scalar)
             if faulty:
@@ -558,6 +583,8 @@ def simulate_placed(
             slot_xs = slot_xs + (keys_e,)
         if faulty:
             slot_xs = slot_xs + (alive_e, alive_prev_e, om_e, pu_e)
+            if cfg.io_coupling:
+                slot_xs = slot_xs + (mu_e_raw,)
             if tel_trace:
                 slot_xs = slot_xs + (t_e,)
             carry0 = (q, key, d_new, r_e, jnp.bool_(False))

@@ -1,13 +1,25 @@
 """repro.serve — serving runtime: sharded prefill/decode steps + the
-GMSA-dispatched continuous-batching fleet engine."""
+simulation-stack-dispatched fleet engine (staged prefill→decode dispatch,
+replica-read routing, admission control, pod-death recovery)."""
 
-from repro.serve.step import make_decode_step, make_prefill_step
-from repro.serve.engine import FleetEngine, FleetConfig, RequestClass
+from repro.serve.step import make_decode_step, make_local_exec, make_prefill_step
+from repro.serve.engine import (
+    FleetConfig,
+    FleetEngine,
+    RequestClass,
+    ServeScenario,
+    build_serve_scenario,
+    serve_policy,
+)
 
 __all__ = [
     "make_decode_step",
+    "make_local_exec",
     "make_prefill_step",
     "FleetEngine",
     "FleetConfig",
     "RequestClass",
+    "ServeScenario",
+    "build_serve_scenario",
+    "serve_policy",
 ]

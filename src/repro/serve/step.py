@@ -10,6 +10,7 @@ replication (the cell is latency-bound; recorded in the roofline notes).
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -20,6 +21,26 @@ from repro.distributed.sharding import (
     param_pspecs,
 )
 from repro.models.lm import decode_step, prefill_step
+
+
+def make_local_exec(cfg: ModelConfig, gen_len: int):
+    """Jitted (prefill_fn, decode_fn) for single-device pod execution.
+
+    The serving engine's pods all run on the local device (capacity
+    heterogeneity + wall-clock noise model the geo-distribution); this
+    factory owns the jit construction the engine used to inline, so the
+    sharded (:func:`make_prefill_step`/:func:`make_decode_step`) and local
+    paths live side by side. ``prefill_fn(params, tokens)`` returns
+    ``(logits, cache)`` with the cache sized for ``gen_len`` extra tokens;
+    ``decode_fn(params, cache, tok)`` advances one token.
+    """
+    prefill_fn = jax.jit(
+        lambda p, t: prefill_step(
+            p, cfg, t, cache_dtype=jnp.float32, cache_len=t.shape[1] + gen_len
+        )
+    )
+    decode_fn = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t))
+    return prefill_fn, decode_fn
 
 
 def make_decode_step(

@@ -42,6 +42,7 @@ from repro.telemetry.ring import (
 from repro.telemetry.collect import (
     collect_records,
     engine_kind,
+    fleet_records,
     switch_events,
     time_to_slo,
 )
@@ -59,7 +60,8 @@ __all__ = [
     "EventRing", "TelemetryFrame", "empty_frame",
     "ring_init", "ring_push", "ring_events",
     "EV_RECOVERY", "EV_EPOCH", "EV_SWITCH", "EV_INGEST_REDIRECT",
-    "collect_records", "engine_kind", "switch_events", "time_to_slo",
+    "collect_records", "engine_kind", "fleet_records", "switch_events",
+    "time_to_slo",
     "write_jsonl", "read_jsonl", "render_timeline", "sparkline",
     "cross_check",
 ]

@@ -201,3 +201,68 @@ def collect_records(
     if summary is not None:
         records.append({"type": "summary", "kind": kind, **summary})
     return records
+
+
+def fleet_records(out: dict, *, meta: dict | None = None) -> list[dict]:
+    """Record stream for one :meth:`repro.serve.engine.FleetEngine.run`.
+
+    The serving engine returns a plain dict (its history carries host-side
+    per-slot records already), so this is a thin re-shaping into the same
+    meta / event / metric / summary stream ``collect_records`` emits for
+    the scan engines — one writer (:func:`repro.telemetry.export.write_jsonl`)
+    and one report tool serve all engines. Recovery events carry
+    ``time_to_slo`` against the run's total-backlog series, thresholded at
+    the engine's own ``slo_backlog`` (summed over classes).
+    """
+    cost = _np(out["cost"])
+    backlog = _np(out["backlog"])
+    t_slots = cost.shape[0]
+    n_k = len(out["history"][0]["admitted"])
+    slo_thr = None
+    records: list[dict] = [{
+        "type": "meta", "schema": SCHEMA_VERSION, "kind": "serve",
+        "t_slots": int(t_slots), "level": 0, "events_dropped": 0,
+        **(meta or {}),
+    }]
+
+    events = [dict(ev) for ev in out.get("events", ())]
+    for ev in events:
+        if slo_thr is None:
+            # Fleet-level SLO: every class at its per-class threshold.
+            slo_thr = float(meta.get("slo_backlog", 0.0)) * n_k if meta else 0.0
+        tts, thr = time_to_slo(
+            backlog, ev["t"],
+            TelemetryConfig(slo_backlog=slo_thr or float(backlog.mean())),
+        )
+        ev["time_to_slo"] = tts
+        ev["slo_backlog"] = thr
+    events.extend(switch_events(out["dispatch"]))
+    events.sort(key=lambda e: (e["t"], e["code"]))
+    records.extend(events)
+
+    wan_slot = _np(out["wan_cost"])
+    wan_gb = _np(out["wan_gb"])
+    for t, h in enumerate(out["history"]):
+        records.append({
+            "type": "metric", "t": t,
+            "cost": float(cost[t]), "backlog": float(backlog[t]),
+            "wan_cost": float(wan_slot[t]), "wan_gb": float(wan_gb[t]),
+            "admitted": float(sum(h["admitted"])),
+            "rejected": float(sum(h["rejected"])),
+            "served": float(sum(h["served"])),
+            "energy_j": float(sum(h["energy_j"])),
+            "slo_viol": int(sum(h["slo_viol"])),
+        })
+
+    records.append({
+        "type": "summary", "kind": "serve",
+        "mean_cost": float(out["mean_cost"]),
+        "final_backlog": float(out["final_backlog"]),
+        "total_billed_cost": float(out["total_billed_cost"]),
+        "admitted": float(_np(out["admitted"]).sum()),
+        "rejected": float(_np(out["rejected"]).sum()),
+        "served": float(_np(out["served"]).sum()),
+        "exec_jobs": int(out["exec_jobs"]),
+        "n_recoveries": int(len(out.get("events", ()))),
+    })
+    return records

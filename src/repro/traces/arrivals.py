@@ -44,6 +44,57 @@ def poisson_arrivals(
     return draws
 
 
+def admission_split(
+    arrivals: Array, admit_max: float | Array | None
+) -> tuple[Array, Array]:
+    """Per-class per-slot admission control: (admitted, rejected).
+
+    The serving front end caps each class's per-slot intake at
+    ``admit_max`` (scalar broadcasts over classes; a (K,) array gives
+    per-class caps; ``None`` admits everything). Rejected mass is load
+    shed at the door — it never enters a queue and is never billed —
+    and the split is exact: ``arrivals == admitted + rejected``
+    elementwise, the conservation identity the serving tests pin.
+    """
+    arrivals = jnp.asarray(arrivals, jnp.float32)
+    if admit_max is None:
+        return arrivals, jnp.zeros_like(arrivals)
+    cap = jnp.broadcast_to(
+        jnp.asarray(admit_max, jnp.float32), arrivals.shape[-1:]
+    )
+    admitted = jnp.minimum(arrivals, cap[None, :])
+    return admitted, arrivals - admitted
+
+
+def serve_rate_tables(
+    rates, shares, mu_headroom: float = 1.0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Inverse-CDF tables for a serving front end's (arrivals, capacity).
+
+    Args:
+        rates: (K,) per-class Poisson request rates (jobs/slot).
+        shares: (N,) per-pod capacity shares; pod i's per-class service
+            rate is ``shares[i] * sum(rates) / K * mu_headroom`` — the
+            same straggler-noise model the original ``FleetEngine`` drew
+            per slot with ``np.random``, now precomputed so the whole
+            horizon is ONE batched ``searchsorted``
+            (:func:`poisson_pair_from_tables`).
+        mu_headroom: fleet capacity / offered load multiplier.
+
+    Returns:
+        (arr_cdf (K, M+1), mu_cdf (N, K, M+1)) float32 CDF tables sharing
+        one truncation width M (Poisson tails beyond mean + 8·sqrt(mean)
+        are below ~1e-9 — the finite-A_max premise of Lemma 1).
+    """
+    rates = np.asarray(rates, np.float64)
+    shares = np.asarray(shares, np.float64)
+    k = rates.shape[0]
+    mu_mean = shares[:, None] * rates.sum() / k * mu_headroom * np.ones((1, k))
+    top = max(float(rates.max()), float(mu_mean.max()), 1.0)
+    m = int(np.ceil(top + 8.0 * np.sqrt(top) + 8.0))
+    return poisson_table(rates, m), poisson_table(mu_mean, m)
+
+
 # ---------------------------------------------------------------------------
 # Fast exact Poisson via inverse-CDF tables (EXPERIMENTS.md §Perf v4).
 #

@@ -1,4 +1,4 @@
-"""FleetEngine integration: GMSA dispatch over real (tiny) models."""
+"""FleetEngine integration: staged dispatch over real (tiny) models."""
 
 import numpy as np
 import pytest
@@ -15,7 +15,8 @@ def test_dispatch_only_run(engine):
     out = engine.run(execute_real=False)
     assert out["cost"].shape == (12,)
     assert np.all(out["cost"] >= 0)
-    f = out["dispatch"]                      # (T, N, K)
+    f = out["dispatch"]                      # (T, N, K, S)
+    assert f.shape == (12, 4, 1, 2)
     np.testing.assert_allclose(f.sum(axis=1), 1.0, atol=1e-5)
     # energy pricing uses the FULL architecture (0.49B params), not smoke
     assert engine.p_it[0] > 0
@@ -26,9 +27,9 @@ def test_history_records_choice_queue_energy(engine):
     hist = out["history"]
     assert [h["t"] for h in hist] == list(range(12))
     for t, h in enumerate(hist):
-        # Choice is the argmax pod of the recorded dispatch row.
+        # Choice is the argmax pod of the decode (final) stage's dispatch.
         np.testing.assert_array_equal(
-            h["choice"], out["dispatch"][t].argmax(axis=0))
+            h["choice"], out["dispatch"][t][:, :, -1].argmax(axis=0))
         assert len(h["q_pod"]) == engine.fcfg.n_pods
         assert all(d >= 0.0 for d in h["q_pod"])
         assert all(j >= 0.0 for j in h["energy_j"])
@@ -42,17 +43,20 @@ def test_history_records_choice_queue_energy(engine):
 def test_stream_callback_receives_ordered_slots(engine):
     seen = []
     out = engine.run(execute_real=False, stream=seen.append)
+    import jax
+    jax.effects_barrier()
     assert [r["t"] for r in seen] == list(range(12))
     for r, c, b in zip(seen, out["cost"], out["backlog"]):
         assert r["type"] == "metric" and r["engine"] == "serve"
-        assert r["cost"] == pytest.approx(float(c), rel=1e-5, abs=1e-12)
+        assert r["cost"] == pytest.approx(float(c), rel=1e-4, abs=1e-10)
         assert r["backlog"] == pytest.approx(float(b), rel=1e-5, abs=1e-12)
 
 
 def test_real_execution_smoke(engine):
     out = engine.run(execute_real=True)
     assert out["exec_seconds"] > 0           # models actually ran
-    assert out["final_backlog"] < 200        # stable under GMSA
+    assert out["exec_jobs"] > 0
+    assert out["final_backlog"] < 200        # stable under staged dispatch
 
 
 def test_high_v_prefers_cheap_pods():
@@ -63,43 +67,35 @@ def test_high_v_prefers_cheap_pods():
     assert o2["mean_cost"] <= o1["mean_cost"] * 1.001
 
 
-def test_gmsa_beats_random_dispatch_on_fleet():
-    """Fleet-level quantification: GMSA's energy-cost saving vs RANDOM
-    dispatch on the same arrivals/pods (the paper's headline, on the LLM
-    fleet instead of Hadoop jobs)."""
+def test_staged_beats_random_dispatch_on_fleet():
+    """Fleet-level quantification: the joint stage scheduler vs RANDOM
+    dispatch on the SAME scenario traces (the paper's headline, on the
+    LLM fleet instead of Hadoop jobs). Unlike the old hand-rolled replay,
+    both arms now run the same engine on the same arrivals/mu draws, so
+    the deltas are pure policy. In the serving regime the per-job energy
+    is kWh-scale, so most of the dispatchable headroom is queueing: the
+    pin is a strict compute-cost saving plus a large backlog reduction."""
     import jax
-    import jax.numpy as jnp
 
     from repro.core.baselines import random_dispatch
-    from repro.core.energy import manager_energy_cost
-    from repro.core.queues import queue_step
+    from repro.jobs.engine import simulate_staged
+    from repro.jobs.scheduler import stage_oblivious
 
     engine = build_engine(["qwen2-0.5b", "granite-3-2b"], slots=48, v=10.0,
                           seed=7, arrival=5.0)
-    out_gmsa = engine.run(execute_real=False)
+    out = engine.run(execute_real=False)
 
-    # Replay identical slots under RANDOM dispatch.
-    rng = np.random.default_rng(7)
-    n, k = 4, 2
-    q = jnp.zeros((n, k), jnp.float32)
-    shares = np.asarray(engine.fcfg.capacity_shares[:n], np.float32)
-    key = jax.random.key(123)
-    costs = []
-    for t in range(48):
-        arrivals = jnp.asarray(
-            [rng.poisson(rc.arrival_rate) for rc in engine.classes], jnp.float32
-        )
-        omega_t = jnp.asarray(engine.omega[t % len(engine.omega)])
-        pue_t = jnp.asarray(engine.pue[t % len(engine.pue)])
-        e = manager_energy_cost(omega_t, pue_t, jnp.asarray(engine.r), engine.p_it)
-        lam_tot = sum(rc.arrival_rate for rc in engine.classes)
-        mu = jnp.asarray(rng.poisson(shares[:, None] * lam_tot / k, size=(n, k)),
-                         jnp.float32)
-        key, sub = jax.random.split(key)
-        f = random_dispatch(sub, q, arrivals, mu, e, None)
-        costs.append(float(jnp.sum((f * arrivals[None, :]).T * e)))
-        q = queue_step(q, f, arrivals, mu)
-    mean_random = float(np.mean(costs))
-    saving = 1.0 - out_gmsa["mean_cost"] / mean_random
-    # GMSA should save a double-digit fraction of fleet energy cost.
-    assert saving > 0.10, f"fleet saving only {100*saving:.1f}%"
+    # RANDOM as the old engine ran it: any pod may serve any job
+    # (unpinned), on the identical admitted arrivals / capacity draws.
+    scn = engine.scenario
+    outs = simulate_staged(
+        scn.inputs, scn.dag, scn.wan,
+        stage_oblivious(random_dispatch, pin_map=False),
+        jax.random.key(123), engine.fcfg.v,
+    )
+    mean_random = float(np.asarray(outs.cost).mean())
+    saving = 1.0 - out["mean_cost"] / mean_random
+    assert saving > 0.03, f"fleet compute saving only {100*saving:.1f}%"
+    backlog_ratio = (out["backlog"].mean()
+                     / float(np.asarray(outs.backlog_total).mean()))
+    assert backlog_ratio < 0.8, f"backlog ratio {backlog_ratio:.2f}"

@@ -345,3 +345,94 @@ def test_ingest_aimed_at_dead_site_redirects_to_survivors(paper_setup):
     gap0 = np.abs(placements[1][:, survivors] - 1 / 3).max()
     gap_last = np.abs(placements[-1][:, survivors] - 1 / 3).max()
     assert gap_last < gap0
+
+
+# ---------------------------------------------------------------------------
+# io_coupling across a death edge (the stale-epoch-scale fix)
+# ---------------------------------------------------------------------------
+
+def test_all_alive_mask_bit_exact_with_io_coupling(paper_setup):
+    """The io_coupling fault path keeps the all-ones identity: the per-slot
+    mu re-derivation is cond-gated on the death edge, so alive=ones never
+    enters it."""
+    cfg, template, _, up, down = paper_setup
+    pcfg = _pcfg(cfg, io_coupling=True)
+    key = jax.random.key(21)
+    ones = jnp.ones((cfg.t_slots, cfg.n_sites), jnp.float32)
+    o0 = simulate_placed(template, up, down, dispatch_fn(1.0),
+                         make_adaptive_rule(up), key, pcfg)
+    o1 = simulate_placed(template, up, down, dispatch_fn(1.0),
+                         make_adaptive_rule(up), key, pcfg, alive=ones)
+    for field in o0._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(o0, field)), np.asarray(getattr(o1, field)),
+            err_msg=field,
+        )
+
+
+def test_io_coupling_rescales_inside_recovery_epoch(paper_setup):
+    """A mid-epoch death re-derives the I/O service scale from the recovery
+    layout per slot — not the stale epoch value.
+
+    Single epoch (W = T), static rule, move_budget = 0: the post-edge
+    layout is exactly the survivor-renormalized initial layout, so the
+    coupled faulted run must match an UNcoupled faulted run whose mu trace
+    is hand-scaled by that layout's slowdown ratio from the edge onward.
+    The epoch-0 scale is exactly 1.0, so pre-edge slots agree bitwise.
+    """
+    from repro.traces.datasets import io_slowdown_from_bandwidth
+
+    cfg, template, _, up, down = paper_setup
+    dead, t_die = 1, 100
+    mask = scheduled_failure_trace(cfg.t_slots, cfg.n_sites,
+                                   [(dead, t_die, None)])
+    pcfg = _pcfg(cfg, epoch_slots=cfg.t_slots, io_coupling=True,
+                 move_budget=0.0)
+    pcfg_off = _pcfg(cfg, epoch_slots=cfg.t_slots, io_coupling=False,
+                     move_budget=0.0)
+    pol = dispatch_fn(1.0)
+    key = jax.random.key(13)
+
+    coupled = simulate_placed(template, up, down, pol,
+                              static_placement_rule, key, pcfg, alive=mask)
+
+    # The recovery layout: survivors renormalized, nothing re-placed.
+    alive_v = jnp.asarray(mask[t_die])
+    masked = template.data_dist * alive_v[None, :]
+    d_drop = masked / jnp.sum(masked, axis=1, keepdims=True)
+    slow0 = io_slowdown_from_bandwidth(
+        up, down, template.data_dist, pcfg.io_compute_seconds, pcfg.io_job_gb
+    )
+    scale = io_slowdown_from_bandwidth(
+        up, down, d_drop, pcfg.io_compute_seconds, pcfg.io_job_gb
+    ) / slow0                                                  # (N,)
+    assert not np.allclose(np.asarray(scale), 1.0), (
+        "evacuation must change the survivors' I/O slowdown for this "
+        "scenario to pin anything"
+    )
+    mu_hand = template.mu.at[t_die:].set(
+        template.mu[t_die:] * scale[None, :, None]
+    )
+    reference = simulate_placed(
+        template._replace(mu=mu_hand), up, down, pol,
+        static_placement_rule, key, pcfg_off, alive=mask,
+    )
+    np.testing.assert_allclose(np.asarray(coupled.cost),
+                               np.asarray(reference.cost), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(coupled.backlog_total),
+                               np.asarray(reference.backlog_total),
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(coupled.q_final),
+                               np.asarray(reference.q_final),
+                               rtol=1e-5, atol=1e-3)
+
+    # And the fix is live: the stale-scale behaviour (uncoupled mu after
+    # the edge) visibly diverges from the coupled run.
+    stale = simulate_placed(template, up, down, pol,
+                            static_placement_rule, key, pcfg_off, alive=mask)
+    assert not np.allclose(np.asarray(coupled.backlog_total)[t_die:],
+                           np.asarray(stale.backlog_total)[t_die:],
+                           rtol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(coupled.cost)[:t_die], np.asarray(stale.cost)[:t_die]
+    )
