@@ -129,6 +129,22 @@ def _provenance() -> dict:
     }
 
 
+def read_bench_history(path=None) -> list[dict]:
+    """Load the perf-trajectory entries (``[]`` on missing/corrupt file).
+
+    Shared by :func:`write_bench_json` (append + dedup) and callers that
+    want to inspect the trajectory (e.g. before handing it to
+    ``repro.telemetry.bench_check``).
+    """
+    path = pathlib.Path(path) if path is not None else BENCH_JSON
+    if not path.exists():
+        return []
+    try:
+        return json.loads(path.read_text())
+    except json.JSONDecodeError:
+        return []
+
+
 def write_bench_json(label: str | None = None):
     """Append this process's emitted records to :data:`BENCH_JSON`.
 
@@ -146,12 +162,7 @@ def write_bench_json(label: str | None = None):
     """
     if not _RECORDS:
         return
-    history = []
-    if BENCH_JSON.exists():
-        try:
-            history = json.loads(BENCH_JSON.read_text())
-        except json.JSONDecodeError:
-            history = []
+    history = read_bench_history()
     payload = [(r["name"], r["derived"]) for r in _RECORDS]
     for prev in reversed(history):
         if prev.get("label") != label:

@@ -17,8 +17,11 @@ path:
   on CPU/CI).
 
 ``--quick`` is the tier-1 CI step: dispatch-only, n_pods = 8, a few
-slots of the kernel grid. The full run adds a real-execution row
-(prefill+decode for drained jobs) on the smoke models.
+slots of the kernel grid. The staged run carries the sojourn-histogram
+layer; ``--flight OUT.jsonl`` saves its flight-record stream and
+``--trace OUT.json`` the folded Chrome trace (CI uploads both as
+artifacts). The full run adds a real-execution row (prefill+decode for
+drained jobs) on the smoke models.
 """
 
 from __future__ import annotations
@@ -36,6 +39,16 @@ from repro.configs.fleet_256 import make_serve_grid
 from repro.jobs.engine import simulate_staged
 from repro.launch.serve import build_engine
 from repro.serve.engine import FleetConfig, FleetEngine, RequestClass, serve_policy
+from repro.telemetry import (
+    SUMMARY,
+    HistogramSpec,
+    SloSpec,
+    TelemetryConfig,
+    fleet_records,
+    spans_from_records,
+    write_chrome_trace,
+    write_jsonl,
+)
 
 
 def _timed_run(engine: FleetEngine, execute_real: bool):
@@ -74,6 +87,13 @@ def _assert_conservation(out: dict):
     assert np.allclose(
         out["raw_arrivals"], out["admitted"] + out["rejected"]
     ), "admission split is not exact"
+    if "sojourn_hist" in out:
+        # The sojourn clock conserves the same flow: every unit of
+        # completed mass landed in exactly one histogram bucket.
+        hist_mass = out["sojourn_hist"].sum(axis=-1)
+        assert np.allclose(hist_mass, comp, atol=1e-2), (
+            f"sojourn histogram lost mass: {hist_mass} vs completed {comp}"
+        )
 
 
 def main(argv=None):
@@ -82,26 +102,48 @@ def main(argv=None):
         "--quick", action="store_true",
         help="dispatch-only smoke version (CI tier-1 step)",
     )
+    parser.add_argument(
+        "--flight", default=None, metavar="OUT.jsonl",
+        help="write the staged run's flight-record stream here",
+    )
+    parser.add_argument(
+        "--trace", default=None, metavar="OUT.json",
+        help="write the staged run's Chrome trace (Perfetto) here",
+    )
     args, _ = parser.parse_known_args(argv)
 
     slots = 16 if args.quick else 32
 
-    # -- staged dispatch, 8 pods (the capacity_shares-derivation regression).
+    # -- staged dispatch, 8 pods (the capacity_shares-derivation regression),
+    #    with the sojourn-histogram layer on (telemetry must not perturb
+    #    the replay-parity or conservation pins).
+    tcfg = TelemetryConfig(level=SUMMARY, hist=HistogramSpec())
     eng = build_engine(
         ["qwen2-0.5b"], slots, v=1.0, seed=3, arrival=6.0,
-        n_pods=8, admit_max=10.0,
+        n_pods=8, admit_max=10.0, telemetry=tcfg,
     )
     out, us = _timed_run(eng, execute_real=False)
     _assert_parity(eng, out)
     _assert_conservation(out)
+    p99 = out["sojourn_percentiles"][0]["p99"]
     emit(
         f"serve_staged_8pods_{slots}slots", us,
         f"mean_cost={out['mean_cost']:.3e};"
         f"wan_cost={out['wan_cost'].sum():.3e};"
         f"backlog={out['final_backlog']:.1f};"
         f"admitted={out['admitted'].sum():.0f};"
-        f"rejected={out['rejected'].sum():.0f}",
+        f"rejected={out['rejected'].sum():.0f};"
+        f"sojourn_p99={p99:.2f}",
     )
+    if args.flight or args.trace:
+        slo = SloSpec(target=8.0, percentile=99.0)
+        records = fleet_records(out, meta={"slo_backlog": 50.0}, slo=slo)
+        if args.flight:
+            write_jsonl(records, args.flight)
+            print(f"flight record -> {args.flight}")
+        if args.trace:
+            write_chrome_trace(spans_from_records(records), args.trace)
+            print(f"chrome trace  -> {args.trace}")
 
     # -- fleet-scale kernel dispatch: N = 256 pod grid through the Pallas
     #    path (interpret on CPU).

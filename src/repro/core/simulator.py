@@ -43,6 +43,8 @@ from repro.core.energy import manager_energy, manager_energy_cost
 from repro.core.queues import queue_step
 from repro.telemetry.config import TelemetryConfig
 from repro.telemetry.config import enabled as _tel_enabled
+from repro.telemetry.config import histograms as _tel_hist
+from repro.telemetry.metrics import hist_series
 from repro.telemetry.ring import TelemetryFrame, ring_init
 
 
@@ -235,9 +237,19 @@ def simulate(
     q_final = final_carry[0] if keyed else final_carry
     outs = SimOutputs(cost, energy, btot, bavg, q_final, f_trace)
     if tel_on:
-        return outs, TelemetryFrame(
-            ring=ring_init(1), metrics={"q_site": q_site}
-        )
+        metrics = {"q_site": q_site}
+        if _tel_hist(telemetry):
+            # Per-site energy-cost distribution, derived post-scan from
+            # the stacked dispatch trace (zero ops in the scan body): the
+            # per-slot (N,) site bill is sum_k (f·A) * e_cost, the same
+            # contraction ``slot_step`` sums globally.
+            site_cost = jnp.einsum(
+                "tnk,tk,tkn->tn", f_trace, inputs.arrivals, e_cost_all
+            )
+            metrics["site_cost_hist"] = hist_series(
+                telemetry.hist, site_cost, axis=0
+            )                                                  # (N, B)
+        return outs, TelemetryFrame(ring=ring_init(1), metrics=metrics)
     return outs
 
 

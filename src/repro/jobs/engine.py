@@ -59,6 +59,8 @@ from repro.jobs.scheduler import stage_oblivious, stage_service_rates_all
 from repro.placement.wan import WanModel, plan_cost
 from repro.telemetry.config import TelemetryConfig
 from repro.telemetry.config import enabled as _tel_enabled
+from repro.telemetry.config import histograms as _tel_hist
+from repro.telemetry.metrics import hist_series
 from repro.telemetry.ring import TelemetryFrame, ring_init
 
 #: Zero-flow guard for the source-mix normalization — the same epsilon
@@ -360,15 +362,24 @@ def simulate_staged(
             vol_all.transpose(1, 0, 2),                            # (S,T,K)
             wan, inputs.omega, inputs.pue,
         )                                                          # (S, T)
-        return outs, TelemetryFrame(
-            ring=ring_init(1),
-            metrics={
-                "q_site": jnp.sum(q_next_all, axis=(2, 3)),        # (T, N)
-                "stage_backlog": stage_backlog,                    # (T, S)
-                "stage_wan_cost": sw_c.T,                          # (T, S)
-                "stage_wan_gb": sw_gb.T,                           # (T, S)
-            },
-        )
+        metrics = {
+            "q_site": jnp.sum(q_next_all, axis=(2, 3)),            # (T, N)
+            "stage_backlog": stage_backlog,                        # (T, S)
+            "stage_wan_cost": sw_c.T,                              # (T, S)
+            "stage_wan_gb": sw_gb.T,                               # (T, S)
+        }
+        if _tel_hist(telemetry):
+            # Per-(slot, stage) queue delay in slots — the stage's total
+            # backlog over its fleet-wide service capacity (the fluid
+            # analogue of "how long does work admitted now wait here") —
+            # histogrammed per stage over the horizon, post-scan.
+            cap_stage = jnp.sum(mu_stage_all, axis=(1, 2))         # (T, S)
+            delay = stage_backlog / jnp.maximum(cap_stage, _EPS)
+            metrics["queue_delay"] = delay                         # (T, S)
+            metrics["queue_delay_hist"] = hist_series(
+                telemetry.hist, delay, axis=0
+            )                                                      # (S, B)
+        return outs, TelemetryFrame(ring=ring_init(1), metrics=metrics)
     return outs
 
 

@@ -23,6 +23,7 @@ import numpy as np
 from repro.configs import get_arch
 from repro.core.iridium import build_task_allocation
 from repro.serve.engine import FleetConfig, FleetEngine, RequestClass
+from repro.telemetry.config import TelemetryConfig
 from repro.traces.bandwidth import bandwidth_draw
 from repro.traces.datasets import dataset_distribution
 from repro.traces.price import FACEBOOK_SITES, price_trace
@@ -32,7 +33,8 @@ from repro.traces.pue import pue_trace
 def build_engine(classes: list[str], slots: int, v: float, seed: int = 0,
                  arrival: float = 6.0, n_pods: int = 4,
                  admit_max: float | None = None, dispatch: str = "staged",
-                 alive: np.ndarray | None = None) -> FleetEngine:
+                 alive: np.ndarray | None = None,
+                 telemetry: TelemetryConfig | None = None) -> FleetEngine:
     key = jax.random.key(seed)
     k1, k2, k3, k4 = jax.random.split(key, 4)
     # Pods beyond the four Facebook DCs reuse their site climates (cycled).
@@ -57,7 +59,7 @@ def build_engine(classes: list[str], slots: int, v: float, seed: int = 0,
     )
     return FleetEngine(
         fcfg, rcs, omega, pue, r,
-        up=up, down=down, layout=layout, alive=alive,
+        up=up, down=down, layout=layout, alive=alive, telemetry=telemetry,
     )
 
 

@@ -59,7 +59,9 @@ from repro.core.simulator import (
 from repro.placement.replica import sync_cost as replica_sync_cost
 from repro.telemetry.config import TelemetryConfig
 from repro.telemetry.config import enabled as _tel_enabled
+from repro.telemetry.config import histograms as _tel_hist
 from repro.telemetry.config import tracing as _tel_tracing
+from repro.telemetry.metrics import hist_series
 from repro.telemetry.ring import (
     EV_EPOCH,
     EV_INGEST_REDIRECT,
@@ -262,6 +264,7 @@ def simulate_placed(
     """
     tel_on = _tel_enabled(telemetry)
     tel_trace = _tel_tracing(telemetry)
+    tel_hist = _tel_hist(telemetry)
     t_slots, k_types = inputs.arrivals.shape
     n = inputs.mu.shape[1]
     if inputs.data_dist.ndim != 2 or inputs.r.ndim != 3:
@@ -569,6 +572,14 @@ def simulate_placed(
             q_next, out = slot_step(q2, f, arrivals, mu, ec, er)
             if tel_on:
                 tel_out = (jnp.sum(q_next, axis=-1),)     # (N,) per-site q
+                if tel_hist:
+                    # Per-site slice of the bill ``slot_step`` just summed
+                    # — recorded in-scan because recovery epochs rewrite
+                    # the energy rows mid-epoch (``ec`` is cond-carried,
+                    # not reconstructible from the epoch tables post-scan).
+                    tel_out = tel_out + (
+                        jnp.sum(f * arrivals[None, :] * ec.T, axis=1),
+                    )
             else:
                 tel_out = ()
             if faulty:
@@ -623,7 +634,8 @@ def simulate_placed(
     else:
         (q_final, _, _), outs = jax.lax.scan(epoch, carry_init, xs)
     # Per-slot scan columns lead; the epoch-level audit trail follows.
-    n_slot_cols = 5 + (2 if faulty else 0) + (1 if tel_on else 0)
+    n_slot_cols = (5 + (2 if faulty else 0) + (1 if tel_on else 0)
+                   + (1 if tel_hist else 0))
     slot_cols = outs[:n_slot_cols]
     (d_tr, r_tr, wc, we, wgb, wlat, sc, msc) = outs[n_slot_cols:]
     (cost, energy, btot, bavg, f_trace) = slot_cols[:5]
@@ -644,10 +656,16 @@ def simulate_placed(
         mu_scale=msc,
     )
     if tel_on:
-        q_site = slot_cols[-1]                                # (E, W, N)
+        q_site = slot_cols[-2] if tel_hist else slot_cols[-1]  # (E, W, N)
+        metrics = {"q_site": flat(q_site)}
+        if tel_hist:
+            site_cost = flat(slot_cols[-1])                    # (T, N)
+            metrics["site_cost_hist"] = hist_series(
+                telemetry.hist, site_cost, axis=0
+            )                                                  # (N, B)
         return placed, TelemetryFrame(
             ring=ring_out if tel_trace else ring_init(1),
-            metrics={"q_site": flat(q_site)},
+            metrics=metrics,
         )
     return placed
 

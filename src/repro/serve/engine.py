@@ -63,6 +63,13 @@ from repro.placement.controller import survivor_renorm
 from repro.placement.replica import replica_read_assignment
 from repro.placement.wan import WanModel, plan_cost, wan_topology
 from repro.serve.step import make_local_exec
+from repro.telemetry.config import TelemetryConfig
+from repro.telemetry.config import histograms as _tel_hist
+from repro.telemetry.metrics import (
+    percentile_table,
+    sojourn_init,
+    sojourn_step,
+)
 from repro.traces.arrivals import (
     admission_split,
     poisson_pair_from_tables,
@@ -285,8 +292,14 @@ class FleetEngine:
         down: Array | None = None,
         layout: Array | None = None,   # (K, N) placement layout
         alive: np.ndarray | None = None,  # (T, N) pod-alive mask
+        telemetry: TelemetryConfig | None = None,
     ):
         self.fcfg = fcfg
+        # The distribution layer (ISSUE 8): a TelemetryConfig with a
+        # HistogramSpec threads a per-class FIFO sojourn clock through the
+        # jitted step — OFF/None leaves the step's jaxpr untouched.
+        self.telemetry = telemetry
+        self._hist_on = _tel_hist(telemetry)
         self.classes = classes
         self.omega, self.pue, self.r = omega, pue, r
         self.key = jax.random.key(fcfg.seed)
@@ -329,25 +342,48 @@ class FleetEngine:
         dag = self.scenario.dag
         returns_flow = getattr(pol, "returns_flow", False)
         key0 = jax.random.key(0)   # signature filler: key-free policies only
+        hist_on = self._hist_on
+        spec = self.telemetry.hist if hist_on else None
 
         def core(q, arrivals, mu, e_cost, mu_stages, dd_t, wpue_t, v):
             ret = pol(key0, q, arrivals, mu, e_cost, (dd_t, wpue_t), v)
             return staged_slot_update(dag, q, ret, arrivals, mu_stages,
                                       returns_flow)
 
+        def clock(age, hist, admitted, done):
+            # Sojourn inflow is ADMITTED mass only — recovery-burst
+            # re-injections keep their original clock, so re-executed
+            # work shows up as tail latency rather than restarting at 0.
+            completed = jnp.sum(done[:, :, -1], axis=0)            # (K,)
+            return sojourn_step(spec, age, hist, admitted, completed)
+
         if not faulty:
+            if not hist_on:
+                @jax.jit
+                def step(q, arrivals, mu, e_cost, mu_stages, dd_t, wpue_t, v):
+                    q_next, f, acc, in_stack = core(
+                        q, arrivals, mu, e_cost, mu_stages, dd_t, wpue_t, v
+                    )
+                    done = jnp.minimum(acc, mu_stages)
+                    return q_next, f, acc, in_stack, done, jnp.float32(0.0)
+                return step
+
             @jax.jit
-            def step(q, arrivals, mu, e_cost, mu_stages, dd_t, wpue_t, v):
+            def step(q, arrivals, mu, e_cost, mu_stages, dd_t, wpue_t, v,
+                     age, hist):
                 q_next, f, acc, in_stack = core(
                     q, arrivals, mu, e_cost, mu_stages, dd_t, wpue_t, v
                 )
                 done = jnp.minimum(acc, mu_stages)
-                return q_next, f, acc, in_stack, done, jnp.float32(0.0)
+                age, hist = clock(age, hist, arrivals, done)
+                return (q_next, f, acc, in_stack, done, jnp.float32(0.0),
+                        age, hist)
             return step
 
         @jax.jit
         def step(q, arrivals, mu, e_cost, mu_stages, dd_t, wpue_t, v,
-                 alive_t, died_t):
+                 alive_t, died_t, *tel):
+            admitted0 = arrivals   # pre-burst: the sojourn inflow
             any_died = jnp.any(died_t > 0.5)
             any_dead = jnp.any(alive_t < 0.5)
             # Recovery drain, mirroring the placement controller's fault
@@ -379,7 +415,11 @@ class FleetEngine:
                 q, arrivals, mu, e_cost, mu_stages, dd_t, wpue_t, v
             )
             done = jnp.minimum(acc, mu_stages)
-            return q_next, f, acc, in_stack, done, jnp.sum(burst)
+            out = (q_next, f, acc, in_stack, done, jnp.sum(burst))
+            if hist_on:
+                age, hist = clock(tel[0], tel[1], admitted0, done)
+                out = out + (age, hist)
+            return out
 
         return step
 
@@ -491,6 +531,11 @@ class FleetEngine:
                             ordered=True)
 
         q = jnp.zeros((n, k, s_max), jnp.float32)
+        hist_on = self._hist_on
+        if hist_on:
+            # Per-class FIFO sojourn clock: the age ring is bounded by the
+            # horizon (no request can wait longer than the run).
+            age, soj_hist = sojourn_init(self.telemetry.hist, k, t_slots)
         f_slots, in_slots, done_slots = [], [], []
         history: list[dict] = []
         events: list[dict] = []
@@ -508,7 +553,12 @@ class FleetEngine:
                 args = args + (
                     jnp.asarray(self.alive[t]), jnp.asarray(died_np[t]),
                 )
-            q, f, acc, in_stack, done, drained = self._step(*args)
+            if hist_on:
+                args = args + (age, soj_hist)
+                (q, f, acc, in_stack, done, drained,
+                 age, soj_hist) = self._step(*args)
+            else:
+                q, f, acc, in_stack, done, drained = self._step(*args)
             f_slots.append(f)
             in_slots.append(in_stack)
             done_slots.append(done)
@@ -598,7 +648,21 @@ class FleetEngine:
             [h["slo_viol"] for h in history], axis=0
         )
 
+        out_tel = {}
+        if hist_on:
+            spec = self.telemetry.hist
+            counts = np.asarray(soj_hist)                          # (K, B)
+            out_tel = {
+                "sojourn_hist": counts,
+                "sojourn_spec": dataclasses.asdict(spec),
+                "class_names": [rc.name for rc in self.classes],
+                "sojourn_percentiles": percentile_table(
+                    counts, spec, names=[rc.name for rc in self.classes]
+                ),
+            }
+
         return {
+            **out_tel,
             "cost": costs,
             "backlog": np.asarray(backlogs),
             "dispatch": np.asarray(f_trace),

@@ -16,6 +16,15 @@ Three layers:
 * **Export**: :func:`write_jsonl` / :func:`read_jsonl`,
   :func:`render_timeline`, and :func:`cross_check`, with the CLI
   ``python -m repro.telemetry.report run.jsonl --check``.
+* **Distributions & spans** (PR 8): :class:`HistogramSpec` enables
+  jit-safe log-bucket histograms riding the scan bodies (request sojourn,
+  queue delay, site cost) decoded to p50/p95/p99 with error bounds
+  (:mod:`repro.telemetry.metrics`); :mod:`repro.telemetry.spans` folds
+  record streams into lifecycle spans exported as Chrome trace-event
+  JSON; :mod:`repro.telemetry.slo` evaluates percentile SLOs with
+  multi-window burn-rate alerts; and
+  ``python -m repro.telemetry.bench_check BENCH_sim.json`` is the
+  perf-regression sentinel over the committed bench trajectory.
 """
 
 from repro.telemetry.config import (
@@ -25,7 +34,28 @@ from repro.telemetry.config import (
     Level,
     TelemetryConfig,
     enabled,
+    histograms,
     tracing,
+)
+from repro.telemetry.metrics import (
+    HistogramSpec,
+    fifo_sojourn_replay,
+    hist_add,
+    hist_init,
+    hist_quantiles,
+    hist_series,
+    percentile_table,
+    sojourn_init,
+    sojourn_step,
+    weighted_percentile,
+)
+from repro.telemetry.slo import SloSpec, burn_events, evaluate_slo
+from repro.telemetry.spans import (
+    controller_spans,
+    request_spans,
+    spans_from_records,
+    to_chrome_trace,
+    write_chrome_trace,
 )
 from repro.telemetry.ring import (
     EV_EPOCH,
@@ -56,7 +86,7 @@ from repro.telemetry.export import (
 
 __all__ = [
     "Level", "TelemetryConfig", "OFF", "SUMMARY", "TRACE",
-    "enabled", "tracing",
+    "enabled", "tracing", "histograms",
     "EventRing", "TelemetryFrame", "empty_frame",
     "ring_init", "ring_push", "ring_events",
     "EV_RECOVERY", "EV_EPOCH", "EV_SWITCH", "EV_INGEST_REDIRECT",
@@ -64,4 +94,10 @@ __all__ = [
     "time_to_slo",
     "write_jsonl", "read_jsonl", "render_timeline", "sparkline",
     "cross_check",
+    "HistogramSpec", "hist_init", "hist_add", "hist_series",
+    "hist_quantiles", "percentile_table", "sojourn_init", "sojourn_step",
+    "fifo_sojourn_replay", "weighted_percentile",
+    "SloSpec", "burn_events", "evaluate_slo",
+    "request_spans", "controller_spans", "spans_from_records",
+    "to_chrome_trace", "write_chrome_trace",
 ]

@@ -23,9 +23,12 @@ This module never imports the engines (duck-typing on output fields keeps
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.telemetry.config import TelemetryConfig
+from repro.telemetry.metrics import percentile_table
 from repro.telemetry.ring import (
     CODE_NAMES,
     EV_EPOCH,
@@ -198,12 +201,30 @@ def collect_records(
                 rec["recovery_gb"] = float(rec_gb_slot[t])
             records.append(rec)
 
+    if frame is not None and cfg.histograms:
+        # The distribution layer: per-row bucket counts plus the decoded
+        # percentile table (with error bounds), one record per family.
+        dims = {"site_cost_hist": "site", "queue_delay_hist": "stage",
+                "sojourn_hist": "class"}
+        for name, h in frame.metrics.items():
+            if not name.endswith("_hist"):
+                continue
+            counts = _np(h)
+            records.append({
+                "type": "hist", "name": name[:-5],
+                "dim": dims.get(name, "row"),
+                "spec": dataclasses.asdict(cfg.hist),
+                "counts": counts.tolist(),
+                "percentiles": percentile_table(counts, cfg.hist),
+            })
+
     if summary is not None:
         records.append({"type": "summary", "kind": kind, **summary})
     return records
 
 
-def fleet_records(out: dict, *, meta: dict | None = None) -> list[dict]:
+def fleet_records(out: dict, *, meta: dict | None = None,
+                  slo=None) -> list[dict]:
     """Record stream for one :meth:`repro.serve.engine.FleetEngine.run`.
 
     The serving engine returns a plain dict (its history carries host-side
@@ -213,19 +234,38 @@ def fleet_records(out: dict, *, meta: dict | None = None) -> list[dict]:
     and one report tool serve all engines. Recovery events carry
     ``time_to_slo`` against the run's total-backlog series, thresholded at
     the engine's own ``slo_backlog`` (summed over classes).
+
+    Metric rows carry per-class ``admitted_k`` / ``completed_k`` /
+    ``choice`` columns so the span builder
+    (:func:`repro.telemetry.spans.spans_from_records`) can rebuild
+    request-cohort lifecycles from the saved stream alone. A run with
+    the histogram layer on adds a ``hist`` record (sojourn counts +
+    decoded percentiles); passing ``slo`` (a
+    :class:`repro.telemetry.slo.SloSpec`) folds multi-window burn-rate
+    alerts into the event stream and per-class SLO verdicts into the
+    summary.
     """
+    from repro.telemetry.metrics import HistogramSpec
+    from repro.telemetry.slo import burn_events, evaluate_slo
+
     cost = _np(out["cost"])
     backlog = _np(out["backlog"])
     t_slots = cost.shape[0]
     n_k = len(out["history"][0]["admitted"])
+    class_names = list(out.get("class_names")
+                       or [f"class{i}" for i in range(n_k)])
     slo_thr = None
     records: list[dict] = [{
         "type": "meta", "schema": SCHEMA_VERSION, "kind": "serve",
         "t_slots": int(t_slots), "level": 0, "events_dropped": 0,
+        "class_names": class_names,
         **(meta or {}),
     }]
 
     events = [dict(ev) for ev in out.get("events", ())]
+    if slo is not None:
+        events.extend(burn_events(out["admitted"], out["completed"], slo,
+                                  class_names=class_names))
     for ev in events:
         if slo_thr is None:
             # Fleet-level SLO: every class at its per-class threshold.
@@ -252,7 +292,26 @@ def fleet_records(out: dict, *, meta: dict | None = None) -> list[dict]:
             "served": float(sum(h["served"])),
             "energy_j": float(sum(h["energy_j"])),
             "slo_viol": int(sum(h["slo_viol"])),
+            "admitted_k": [float(x) for x in h["admitted"]],
+            "completed_k": [float(x) for x in h["completed"]],
+            "choice": [int(x) for x in h["choice"]],
         })
+
+    if "sojourn_hist" in out:
+        spec = HistogramSpec(**out["sojourn_spec"])
+        counts = _np(out["sojourn_hist"])
+        records.append({
+            "type": "hist", "name": "sojourn", "dim": "class",
+            "spec": dataclasses.asdict(spec),
+            "counts": counts.tolist(),
+            "percentiles": percentile_table(counts, spec,
+                                            names=class_names),
+        })
+        if slo is not None:
+            records.append({
+                "type": "slo", "verdicts": evaluate_slo(
+                    counts, spec, slo, names=class_names),
+            })
 
     records.append({
         "type": "summary", "kind": "serve",

@@ -18,6 +18,8 @@ from __future__ import annotations
 import dataclasses
 import enum
 
+from repro.telemetry.metrics import HistogramSpec
+
 
 class Level(enum.IntEnum):
     """Telemetry verbosity. Static: each level is its own jit compilation."""
@@ -48,6 +50,13 @@ class TelemetryConfig:
             (``slo_factor`` × the mean over the ``slo_window`` slots
             before the death edge).
         slo_factor / slo_window: the derived-threshold parameters.
+        hist: optional :class:`repro.telemetry.metrics.HistogramSpec`
+            enabling the distribution layer at SUMMARY+ — per-class
+            request-sojourn histograms in ``FleetEngine``, per-stage
+            queue-delay histograms in ``simulate_staged``, per-site
+            energy-cost histograms in ``simulate``/``simulate_placed``.
+            ``None`` (default) adds nothing; OFF ignores it entirely, so
+            the byte-identical-jaxpr contract is unchanged.
     """
 
     level: Level = Level.OFF
@@ -55,6 +64,11 @@ class TelemetryConfig:
     slo_backlog: float | None = None
     slo_factor: float = 1.5
     slo_window: int = 12
+    hist: HistogramSpec | None = None
+
+    @property
+    def histograms(self) -> bool:
+        return self.enabled and self.hist is not None
 
     @property
     def enabled(self) -> bool:
@@ -73,3 +87,8 @@ def enabled(cfg: TelemetryConfig | None) -> bool:
 def tracing(cfg: TelemetryConfig | None) -> bool:
     """True when ``cfg`` asks for the in-scan event ring."""
     return cfg is not None and cfg.tracing
+
+
+def histograms(cfg: TelemetryConfig | None) -> bool:
+    """True when ``cfg`` asks for the histogram metrics layer."""
+    return cfg is not None and cfg.histograms

@@ -43,17 +43,30 @@ def _by_type(records: list[dict]) -> dict[str, list[dict]]:
 
 
 def sparkline(values, width: int = 60) -> str:
-    """Downsampled unicode sparkline of a 1-D series."""
+    """Downsampled unicode sparkline of a 1-D series.
+
+    When downsampling leaves a bin empty (integer edges can collide for
+    ``size`` barely above ``width``), the bin carries the PREVIOUS bin's
+    mean — a flat continuation — rather than duplicating whatever sample
+    sits at the collision index, which would invent a spike out of a
+    value the bin never contained. An all-constant series renders as the
+    lowest visible block (never blank).
+    """
     v = np.asarray(values, np.float64)
     if v.size == 0:
         return ""
     if v.size > width:
         edge = np.linspace(0, v.size, width + 1).astype(int)
-        v = np.asarray([v[a:b].mean() if b > a else v[min(a, v.size - 1)]
-                        for a, b in zip(edge[:-1], edge[1:])])
+        bins, prev = [], float(v[0])
+        for a, b in zip(edge[:-1], edge[1:]):
+            if b > a:
+                prev = float(v[a:b].mean())
+            bins.append(prev)
+        v = np.asarray(bins)
     lo, hi = float(v.min()), float(v.max())
-    span = (hi - lo) or 1.0
-    idx = ((v - lo) / span * (len(_BLOCKS) - 1)).round().astype(int)
+    if hi == lo:
+        return _BLOCKS[1] * v.size
+    idx = ((v - lo) / (hi - lo) * (len(_BLOCKS) - 1)).round().astype(int)
     return "".join(_BLOCKS[i] for i in idx)
 
 
@@ -62,7 +75,7 @@ def _fmt_event(ev: dict) -> str:
     if code == "recovery":
         tts = ev.get("time_to_slo")
         tts_s = f"{tts} slots" if tts is not None else "never (horizon)"
-        return (f"death edge ▸ site {ev.get('site')} "
+        return (f"death edge ▸ site {ev.get('site', ev.get('pod'))} "
                 f"({ev.get('n_died')} died)  evacuated "
                 f"{ev.get('recovery_gb', 0.0):.1f} GB  "
                 f"${ev.get('recovery_cost', 0.0):.2f}  time-to-SLO {tts_s}")

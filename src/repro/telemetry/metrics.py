@@ -1,0 +1,281 @@
+"""Jit-safe fixed-bucket histograms — latency/cost distributions on-device.
+
+The flight recorder (PR 6) gave the engines event and metric *streams*;
+this module gives them *distributions*: a static :class:`HistogramSpec`
+describes a log-spaced bucket layout (plus an underflow bucket below
+``lo`` and an overflow bucket at ``hi``), and the accumulators are plain
+``(..., n_buckets)`` float32 count arrays updated with masked scatter-adds
+— safe inside ``jax.lax.scan`` bodies, `vmap`, and `lax.cond`, exactly
+like :mod:`repro.telemetry.ring`. Engines either fold values into a
+carried histogram (``FleetEngine``'s per-class request-sojourn clock,
+which needs the FIFO age ring below) or histogram a post-scan derived
+stream in one vectorized pass (``simulate_staged``'s per-stage queue
+delays, ``simulate``/``simulate_placed``'s per-site energy cost) — either
+way the OFF path stays byte-identical because everything is gated on the
+static :class:`repro.telemetry.config.TelemetryConfig`.
+
+Host-side, :func:`hist_quantiles` decodes counts into percentile
+estimates with **error bounds**: within a bucket the estimate linearly
+interpolates the bucket's range, so the true quantile is within one
+bucket width (log-spaced: a fixed *relative* resolution of
+``ratio - 1``); the overflow bucket yields its lower edge with an
+unbounded error — widen ``hi`` if p99 lands there.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+
+@dataclasses.dataclass(frozen=True)
+class HistogramSpec:
+    """Static log-spaced bucket layout (hashable: rides in jit static args).
+
+    Buckets: ``[0, lo)`` (underflow), ``n_buckets - 2`` log-spaced buckets
+    covering ``[lo, hi)`` at ratio ``(hi/lo)**(1/(n_buckets-2))``, and
+    ``[hi, inf)`` (overflow). The relative quantile resolution is
+    ``ratio - 1`` — the default 26-bucket 0.5..512 layout resolves to
+    ~33% anywhere in range, tight enough to rank policies on p99 while
+    keeping the accumulator a single cache line per series.
+    """
+
+    lo: float = 0.5
+    hi: float = 512.0
+    n_buckets: int = 26
+
+    def __post_init__(self):
+        if not (self.lo > 0.0 and self.hi > self.lo):
+            raise ValueError(f"need 0 < lo < hi, got [{self.lo}, {self.hi})")
+        if self.n_buckets < 3:
+            raise ValueError("need >= 3 buckets (under, interior, over)")
+
+    @property
+    def ratio(self) -> float:
+        return (self.hi / self.lo) ** (1.0 / (self.n_buckets - 2))
+
+    def edges(self) -> np.ndarray:
+        """(n_buckets + 1,) bucket edges: 0, lo, lo*r, ..., hi, inf."""
+        interior = self.lo * self.ratio ** np.arange(self.n_buckets - 1)
+        interior[-1] = self.hi          # kill the **(n-2) rounding drift
+        return np.concatenate([[0.0], interior, [np.inf]])
+
+    def bucket_index(self, values: Array) -> Array:
+        """Bucket of each value — jit-safe, clipped into [0, n_buckets)."""
+        v = jnp.asarray(values, jnp.float32)
+        step = np.log(self.ratio)
+        idx = 1 + jnp.floor(
+            (jnp.log(jnp.maximum(v, self.lo)) - np.log(self.lo)) / step
+        ).astype(jnp.int32)
+        idx = jnp.where(v < self.lo, 0, idx)
+        return jnp.clip(idx, 0, self.n_buckets - 1)
+
+
+def hist_init(spec: HistogramSpec, *lead: int) -> Array:
+    """A zeroed ``(*lead, n_buckets)`` count accumulator."""
+    return jnp.zeros((*lead, spec.n_buckets), jnp.float32)
+
+
+def hist_add(
+    spec: HistogramSpec,
+    counts: Array,
+    values: Array,
+    weights: Array | None = None,
+) -> Array:
+    """Fold ``values`` (any shape) into a 1-D ``(n_buckets,)`` accumulator.
+
+    ``weights`` defaults to 1 per value; a masked update is just a zero
+    weight, so this composes with ``lax.cond``/death-edge gating the same
+    way :func:`repro.telemetry.ring.ring_push` does.
+    """
+    idx = spec.bucket_index(values).reshape(-1)
+    w = (jnp.ones(idx.shape, jnp.float32) if weights is None
+         else jnp.asarray(weights, jnp.float32).reshape(-1))
+    return counts.at[idx].add(w)
+
+
+def hist_series(spec: HistogramSpec, values: Array, axis: int = -1) -> Array:
+    """Histogram a batched series along ``axis`` in one vectorized pass.
+
+    ``values`` of shape (..., T) (after moving ``axis`` last) becomes
+    (..., n_buckets) counts — the post-scan path: derived per-slot streams
+    (per-site cost, per-stage queue delay) histogrammed for the whole
+    horizon at once, zero ops added to any scan body.
+    """
+    v = jnp.moveaxis(jnp.asarray(values, jnp.float32), axis, -1)
+    idx = spec.bucket_index(v)                           # (..., T)
+    one_hot = (idx[..., None] == jnp.arange(spec.n_buckets)).astype(jnp.float32)
+    return jnp.sum(one_hot, axis=-2)                     # (..., n_buckets)
+
+
+# ---------------------------------------------------------------------------
+# The FIFO sojourn clock: a carried age ring for fluid request queues
+# ---------------------------------------------------------------------------
+
+def sojourn_init(spec: HistogramSpec, k: int, max_age: int) -> tuple[Array, Array]:
+    """Carried state for :func:`sojourn_step`: (age ring, histogram).
+
+    ``age[k, a]`` is class-k request mass admitted ``a`` slots ago and not
+    yet served; ``max_age`` >= the horizon keeps the ring exact (mass
+    older than ``max_age`` pools in the last lane and still drains FIFO).
+    """
+    return jnp.zeros((k, max_age + 1), jnp.float32), hist_init(spec, k)
+
+
+def sojourn_step(
+    spec: HistogramSpec,
+    age: Array,
+    hist: Array,
+    admitted: Array,
+    completed: Array,
+) -> tuple[Array, Array]:
+    """One slot of the per-class FIFO sojourn clock — jit-safe, carried.
+
+    The fluid-queue analogue of request span timing: ``admitted`` (K,)
+    mass enters at age 0, ``completed`` (K,) mass drains oldest-first
+    (the tandem queues are work-conserving and order-preserving in the
+    fluid limit), and each drained sliver lands in the sojourn histogram
+    at its age in slots. Mass wiped and re-injected by a pod-death drain
+    is *not* re-admitted here — its clock keeps running, so recovery
+    re-execution shows up as tail latency, which is the point.
+
+    Returns the advanced ``(age, hist)`` pair.
+    """
+    k, a_max = age.shape
+    # Admit this slot's arrivals at age 0 (they may complete this slot:
+    # the queue step lets f·A flow straight through min(acc, mu)).
+    age = age.at[:, 0].add(jnp.asarray(admitted, jnp.float32))
+    # FIFO drain: oldest age first. tail[k, a] = mass strictly older
+    # than lane a; lane a gives up min(its mass, remaining demand).
+    rev_cum = jnp.cumsum(age[:, ::-1], axis=1)[:, ::-1]            # incl. self
+    tail = rev_cum - age                                           # excl. self
+    c = jnp.asarray(completed, jnp.float32)[:, None]
+    take = jnp.clip(c - tail, 0.0, age)                            # (K, A)
+    ages = jnp.arange(a_max, dtype=jnp.float32)
+    idx = spec.bucket_index(ages)                                  # (A,)
+    hist = hist.at[:, idx].add(take)
+    age = age - take
+    # Advance the clock: every survivor is one slot older; mass at the
+    # ring's edge pools in the last lane (still drains FIFO, its sojourn
+    # clipped at max_age — size the ring to the horizon and it never fires).
+    age = jnp.concatenate(
+        [jnp.zeros((k, 1), jnp.float32), age[:, :-1]], axis=1
+    ).at[:, -1].add(age[:, -1])
+    return age, hist
+
+
+def fifo_sojourn_replay(
+    admitted: np.ndarray, completed: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Exact host-side FIFO replay: per-class sojourn samples + weights.
+
+    ``admitted``/``completed`` are (T, K) fluid counts. Returns
+    ``(sojourn, weight)`` of shape (K, T, T) flattened to (K, T*T) where
+    ``sojourn[k, i]`` is a sojourn in slots and ``weight[k, i]`` the mass
+    that experienced it — the ground truth the device-side
+    :func:`sojourn_step` histogram is validated against (and the input to
+    exact weighted percentiles via :func:`weighted_percentile`).
+    """
+    admitted = np.asarray(admitted, np.float64)
+    completed = np.asarray(completed, np.float64)
+    t_slots, k = admitted.shape
+    soj = np.zeros((k, t_slots * t_slots))
+    wgt = np.zeros((k, t_slots * t_slots))
+    for ki in range(k):
+        ca = np.concatenate([[0.0], np.cumsum(admitted[:, ki])])
+        cc = np.concatenate([[0.0], np.cumsum(completed[:, ki])])
+        out = 0
+        for t in range(t_slots):
+            # Mass completing at slot t occupies [cc[t], cc[t+1]) of the
+            # cumulative-arrival axis; intersect with each admit slot's
+            # segment [ca[s], ca[s+1]) to attribute sojourn t - s.
+            lo_c, hi_c = cc[t], cc[t + 1]
+            if hi_c <= lo_c:
+                continue
+            for s in range(t + 1):
+                m = min(hi_c, ca[s + 1]) - max(lo_c, ca[s])
+                if m > 1e-12:
+                    soj[ki, out] = t - s
+                    wgt[ki, out] = m
+                    out += 1
+    return soj, wgt
+
+
+def weighted_percentile(
+    values: np.ndarray, weights: np.ndarray, qs
+) -> np.ndarray:
+    """Exact weighted percentiles (inverse empirical CDF) of mass samples."""
+    values = np.asarray(values, np.float64).reshape(-1)
+    weights = np.asarray(weights, np.float64).reshape(-1)
+    keep = weights > 0
+    values, weights = values[keep], weights[keep]
+    if values.size == 0:
+        return np.full(np.shape(qs), np.nan)
+    order = np.argsort(values)
+    values, weights = values[order], weights[order]
+    cum = np.cumsum(weights)
+    targets = np.asarray(qs, np.float64) / 100.0 * cum[-1]
+    return values[np.searchsorted(cum, targets, side="left").clip(0, values.size - 1)]
+
+
+# ---------------------------------------------------------------------------
+# Host-side decode: counts -> percentiles with error bounds
+# ---------------------------------------------------------------------------
+
+def hist_quantiles(
+    counts, spec: HistogramSpec, qs=(50.0, 95.0, 99.0)
+) -> tuple[np.ndarray, np.ndarray]:
+    """Percentile estimates + error bounds from bucket counts.
+
+    ``counts`` is (..., n_buckets); returns ``(est, err)`` of shape
+    (..., len(qs)). Within a bucket the estimate linearly interpolates
+    the bucket range, so ``|est - true| <= err`` with ``err`` = the
+    bucket width (``inf`` for the overflow bucket, whose estimate is its
+    lower edge ``hi``; ``nan`` where the histogram is empty).
+    """
+    counts = np.asarray(counts, np.float64)
+    lead = counts.shape[:-1]
+    flat = counts.reshape(-1, spec.n_buckets)
+    edges = spec.edges()
+    width = np.diff(edges)
+    qs = np.asarray(qs, np.float64)
+    est = np.full((flat.shape[0], qs.size), np.nan)
+    err = np.full((flat.shape[0], qs.size), np.nan)
+    for i, row in enumerate(flat):
+        total = row.sum()
+        if total <= 0:
+            continue
+        cum = np.cumsum(row)
+        targets = qs / 100.0 * total
+        b = np.searchsorted(cum, targets, side="left").clip(0, spec.n_buckets - 1)
+        prev = np.where(b > 0, cum[b - 1], 0.0)
+        frac = np.where(row[b] > 0, (targets - prev) / np.maximum(row[b], 1e-300), 0.0)
+        overflow = b == spec.n_buckets - 1
+        est[i] = np.where(
+            overflow, edges[-2], edges[b] + frac * np.where(np.isfinite(width[b]), width[b], 0.0)
+        )
+        err[i] = width[b]
+    return est.reshape(*lead, qs.size), err.reshape(*lead, qs.size)
+
+
+def percentile_table(
+    counts, spec: HistogramSpec, qs=(50.0, 95.0, 99.0), names=None
+) -> list[dict]:
+    """JSON-ready per-row percentile summaries for (R, n_buckets) counts."""
+    counts = np.asarray(counts, np.float64)
+    if counts.ndim == 1:
+        counts = counts[None]
+    est, err = hist_quantiles(counts, spec, qs)
+    rows = []
+    for i in range(counts.shape[0]):
+        row = {"count": float(counts[i].sum())}
+        if names is not None:
+            row = {"name": names[i], **row}
+        for j, q in enumerate(qs):
+            row[f"p{q:g}"] = float(est[i, j])
+            row[f"p{q:g}_err"] = float(err[i, j])
+        rows.append(row)
+    return rows
