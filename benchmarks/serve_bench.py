@@ -22,6 +22,13 @@ layer; ``--flight OUT.jsonl`` saves its flight-record stream and
 ``--trace OUT.json`` the folded Chrome trace (CI uploads both as
 artifacts). The full run adds a real-execution row (prefill+decode for
 drained jobs) on the smoke models.
+
+``--chaos`` adds the degraded-mode arm: the calibrated straggler +
+link-fault trace over the serve scenario, run twice — without and with
+speculative re-execution — recording hedged-job count, duplicated-
+compute overhead, and sojourn p99 for both arms into ``BENCH_sim.json``
+(the trajectory behind the speculation-protocol frontier in
+EXPERIMENTS.md).
 """
 
 from __future__ import annotations
@@ -67,8 +74,11 @@ def _assert_parity(engine: FleetEngine, out: dict):
     assert np.array_equal(out["dispatch"], np.asarray(outs.f_trace)), (
         "serving dispatch trace diverged from simulate_staged"
     )
+    # Hedge-free runs bill zero here, so the pre-speculation parity
+    # contract is unchanged; hedged runs must agree on the full bill.
     sim_total = float(
         np.asarray(outs.cost).sum() + np.asarray(outs.wan_cost).sum()
+        + np.asarray(outs.hedge_cost).sum()
     )
     assert np.isclose(out["total_billed_cost"], sim_total, rtol=1e-5), (
         f"billed cost diverged: engine {out['total_billed_cost']} "
@@ -96,11 +106,69 @@ def _assert_conservation(out: dict):
         )
 
 
+def _sojourn_p99(out: dict) -> float:
+    from repro.telemetry.metrics import fifo_sojourn_replay, weighted_percentile
+
+    soj, wgt = fifo_sojourn_replay(out["admitted"], out["completed"])
+    return float(weighted_percentile(soj, wgt, [99.0])[0])
+
+
+def _chaos_arm():
+    """Degraded-mode pair: the calibrated straggler scenario, hedged vs not.
+
+    Pod 2 (the dominant-capacity pod) drops to 12% of nominal rate from
+    slot 4, and one WAN link browns out mid-run; the hedged arm clones
+    starved stages at threshold 0.35. The recorded frontier point —
+    p99 cut vs duplicated-compute overhead — is the bench twin of the
+    ``test_degraded`` speculation pin (>= 20% cut at <= 10% overhead).
+    """
+    slots, n_pods, hedge = 24, 4, 0.35
+    classes = ["qwen2-0.5b", "mamba2-2.7b"]
+    common = dict(slots=slots, v=1.0, seed=3, arrival=4.0, admit_max=5.0)
+    health = np.ones((slots, n_pods), np.float32)
+    health[4:, 2] = 0.12
+    link_health = np.ones((slots, n_pods, n_pods), np.float32)
+    link_health[8:16, 0, 1] = link_health[8:16, 1, 0] = 0.5
+
+    base = build_engine(classes, health=health, link_health=link_health,
+                        **common)
+    bout, bus = _timed_run(base, execute_real=False)
+    _assert_conservation(bout)
+    hedged = build_engine(classes, health=health, link_health=link_health,
+                          hedge=hedge, **common)
+    hout, hus = _timed_run(hedged, execute_real=False)
+    _assert_conservation(hout)
+
+    p99_b, p99_h = _sojourn_p99(bout), _sojourn_p99(hout)
+    overhead = float(hout["hedge_cost"].sum()) / max(
+        float(hout["cost"].sum()) + float(hout["hedge_cost"].sum()), 1e-12)
+    emit(
+        f"serve_chaos_nohedge_{slots}slots", bus,
+        f"sojourn_p99={p99_b:.2f};"
+        f"backlog={bout['final_backlog']:.1f};"
+        f"completed={bout['completed'].sum():.1f}",
+    )
+    emit(
+        f"serve_chaos_hedge_{slots}slots", hus,
+        f"sojourn_p99={p99_h:.2f};"
+        f"backlog={hout['final_backlog']:.1f};"
+        f"completed={hout['completed'].sum():.1f};"
+        f"hedged_jobs={hout['hedged_jobs'].sum():.2f};"
+        f"hedge_overhead={overhead:.4f};"
+        f"p99_cut={(p99_b - p99_h) / max(p99_b, 1e-12):.3f}",
+    )
+
+
 def main(argv=None):
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
         "--quick", action="store_true",
         help="dispatch-only smoke version (CI tier-1 step)",
+    )
+    parser.add_argument(
+        "--chaos", action="store_true",
+        help="add the degraded-mode arm (stragglers + link faults, "
+             "speculation on/off pair)",
     )
     parser.add_argument(
         "--flight", default=None, metavar="OUT.jsonl",
@@ -168,6 +236,9 @@ def main(argv=None):
         f"backlog={kout['final_backlog']:.1f};"
         f"admitted={kout['admitted'].sum():.0f}",
     )
+
+    if args.chaos:
+        _chaos_arm()
 
     if not args.quick:
         # -- real execution: drained jobs run prefill+decode (smoke models).

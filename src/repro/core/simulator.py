@@ -153,6 +153,7 @@ def simulate(
     key: Array,
     scalar: float | Array = 0.0,
     telemetry: TelemetryConfig | None = None,
+    health: Array | None = None,
 ) -> SimOutputs | tuple[SimOutputs, TelemetryFrame]:
     """Run one trace-driven simulation under ``policy``.
 
@@ -163,8 +164,20 @@ def simulate(
     manager-switch events are derived post-scan from ``f_trace`` by
     :func:`repro.telemetry.collect.switch_events`, so this engine records
     nothing inside the scan body beyond the metric stream.
+
+    ``health`` is an optional (T, N) degraded-mode factor
+    (:func:`repro.traces.faults.health_trace`): per-slot service rates
+    scale as ``mu * health`` — 0 = dead, interior = straggler — applied
+    once *before* the scan (hoisted into the trace bundle, zero extra
+    ops in the scan body). ``None`` leaves the engine's jaxpr untouched,
+    and an all-ones trace is an exact ``* 1.0`` identity, so the
+    degraded path is bitwise the nominal path when nothing degrades.
     """
     tel_on = _tel_enabled(telemetry)
+    if health is not None:
+        inputs = inputs._replace(
+            mu=inputs.mu * jnp.asarray(health, inputs.mu.dtype)[:, :, None]
+        )
     t_slots, k_types = inputs.arrivals.shape
     n = inputs.mu.shape[1]
     q0 = jnp.zeros((n, k_types), jnp.float32)
@@ -263,20 +276,22 @@ def simulate_many(
     n_runs: int,
     scalar: float | Array = 0.0,
     telemetry: TelemetryConfig | None = None,
+    health: Array | None = None,
 ) -> SimOutputs:
     """Monte-Carlo replication: fresh traces + fresh policy randomness per run.
 
     ``build_inputs(key) -> SimInputs`` regenerates the stochastic traces
     (arrivals, service rates) for each run; deterministic traces (prices,
-    PUE, ratios) are closed over and shared. Outputs are stacked on a
-    leading (n_runs,) axis (telemetry frames too, when enabled).
+    PUE, ratios — and the degraded-mode ``health`` factor, when given)
+    are closed over and shared. Outputs are stacked on a leading
+    (n_runs,) axis (telemetry frames too, when enabled).
     """
     keys = jax.random.split(key, n_runs)
 
     def one(run_key):
         k_build, k_sim = jax.random.split(run_key)
         return simulate(build_inputs(k_build), policy, k_sim, scalar,
-                        telemetry)
+                        telemetry, health)
 
     return jax.vmap(one)(keys)
 

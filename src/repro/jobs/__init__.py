@@ -44,6 +44,7 @@ from repro.jobs.engine import (
 )
 from repro.jobs.scheduler import (
     flow_step,
+    hedge_clone_choice,
     make_staged_policy,
     stage_oblivious,
     stage_service_rates,
@@ -65,6 +66,7 @@ __all__ = [
     "simulate_staged_many",
     "summarize_staged",
     "flow_step",
+    "hedge_clone_choice",
     "make_staged_policy",
     "stage_oblivious",
     "stage_service_rates",

@@ -56,7 +56,7 @@ from repro.core.simulator import (
 )
 from repro.jobs.dag import StageDag
 from repro.jobs.scheduler import stage_oblivious, stage_service_rates_all
-from repro.placement.wan import WanModel, plan_cost
+from repro.placement.wan import WanModel, degraded_surcharge, plan_cost
 from repro.telemetry.config import TelemetryConfig
 from repro.telemetry.config import enabled as _tel_enabled
 from repro.telemetry.config import histograms as _tel_hist
@@ -69,6 +69,25 @@ from repro.telemetry.ring import TelemetryFrame, ring_init
 _EPS = 1e-12
 
 
+def hedged_mu(f: Array, g: Array, mu_stages: Array) -> Array:
+    """First-completion service rates under the clone matrix ``g``.
+
+    The boost the policy's flow walk applied, re-derived from the same
+    inputs — ``mu + f · (Σ_n g·mu)`` — so the engine's Eq. 1 drains
+    exactly the flow the scheduler exported. Gated behind ``lax.cond``:
+    slots where no hedge fired keep the unboosted rates bit-for-bit
+    (and pay the branch, not the FMA, in the scan body).
+    """
+
+    def boosted(ms):
+        boost = jnp.sum(g * ms, axis=0)                        # (K, S)
+        return ms + f * boost[None]
+
+    return jax.lax.cond(
+        jnp.any(g > 0.0), boosted, lambda ms: ms, mu_stages
+    )
+
+
 def staged_slot_update(
     dag: StageDag,
     q: Array,
@@ -76,17 +95,21 @@ def staged_slot_update(
     arrivals: Array,
     mu_stages: Array,
     returns_flow: bool,
+    returns_hedge: bool = False,
 ) -> tuple[Array, Array, Array, Array]:
     """One slot of the staged engine: tandem flow + Eq. 1 for every stage.
 
     ``ret`` is the policy's output — ``(f, in_stack)`` for ``returns_flow``
     policies (the stage-aware scheduler already walked the within-slot flow
     via :func:`repro.jobs.scheduler.flow_step`), bare ``f`` otherwise (the
-    recursion is replayed here). This is the SINGLE definition of the
-    per-slot staged update: :func:`simulate_staged`'s scan body calls it,
-    and :class:`repro.serve.engine.FleetEngine`'s serving loop calls it on
-    live traffic — which is what makes a dispatch-only serving run replay
-    bit-for-bit against the simulator on a shared scenario.
+    recursion is replayed here). ``returns_hedge`` policies append the
+    (N, K, S) speculative-clone matrix ``g`` — the queues then drain at
+    the first-completion boosted rates (:func:`hedged_mu`), cond-gated so
+    hedge-free slots stay bit-identical. This is the SINGLE definition of
+    the per-slot staged update: :func:`simulate_staged`'s scan body calls
+    it, and :class:`repro.serve.engine.FleetEngine`'s serving loop calls
+    it on live traffic — which is what makes a dispatch-only serving run
+    replay bit-for-bit against the simulator on a shared scenario.
 
     Returns:
         (q_next, f, acc, in_stack): the advanced (N, K, S) queues, the
@@ -94,7 +117,11 @@ def staged_slot_update(
         Eq. 1's max) and the (K, S) per-stage inflows.
     """
     s_max = dag.s_max
-    if returns_flow:
+    if returns_hedge:
+        f, in_stack, g = ret
+        acc = q + f * in_stack[None, :, :]                         # (N, K, S)
+        mu_stages = hedged_mu(f, g, mu_stages)
+    elif returns_flow:
         f, in_stack = ret
         acc = q + f * in_stack[None, :, :]                         # (N, K, S)
     else:
@@ -156,8 +183,57 @@ def staged_shuffle_mixes(
     return src_all, dst_all, vol_all
 
 
+def _hedge_bill(
+    dag: StageDag,
+    wan: WanModel,
+    g_all: Array,
+    acc_all: Array,
+    mu_stage_all: Array,
+    mu_eff_all: Array,
+    ec_stage_all: Array,
+    src_all: Array,
+    wpue_all: Array,
+) -> tuple[Array, Array, Array]:
+    """Honest post-scan bill for speculative re-execution.
+
+    In the fluid first-completion model the clone's contribution is the
+    boost-attributable completions — ``min(acc, mu_eff) - min(acc, mu)``
+    — re-executed at the clone site. Each re-executed job-unit bills the
+    clone site's per-stage energy cost (compute) plus the expected WAN
+    pull of the stage's input shuffle from the upstream source mix to
+    the clone site (the same fused rank-2 expected-pull form the
+    scheduler prices dispatch with). All (T,)-vectorized, nothing in the
+    scan body.
+
+    Returns:
+        (hedge_cost, hedge_gb, hedged_jobs) — (T,) each: total $ billed
+        (compute + WAN pull), GB pulled to clone sites, and re-executed
+        job-units completed by clones.
+    """
+    extra = (jnp.minimum(acc_all, mu_eff_all)
+             - jnp.minimum(acc_all, mu_stage_all))             # (T,N,K,S)
+    extra_ks = jnp.sum(extra, axis=1)                          # (T,K,S)
+    ec_clone = jnp.einsum("tnks,tksn->tks", g_all, ec_stage_all)
+    compute_bill = jnp.sum(extra_ks * ec_clone, axis=(1, 2))   # (T,)
+    g_skn = g_all.transpose(0, 3, 2, 1)                        # (T,S,K,N)
+    w = wpue_all[:, None, None, :]                             # (T,1,1,N)
+    dot = jnp.sum(src_all * w, axis=-1)                        # (T,S,K)
+    pull = 0.5 * (dot[..., None] + w) - src_all * w            # (T,S,K,N)
+    price_clone = jnp.sum(pull * g_skn, axis=-1)               # (T,S,K)
+    vol = extra_ks.transpose(0, 2, 1) * dag.shuffle_gb.T[None]  # (T,S,K)
+    wan_bill = wan.energy_per_gb * jnp.sum(price_clone * vol, axis=(1, 2))
+    hedge_gb = jnp.sum(vol, axis=(1, 2))
+    hedged_jobs = jnp.sum(extra_ks, axis=(1, 2))
+    return compute_bill + wan_bill, hedge_gb, hedged_jobs
+
+
 class StagedOutputs(NamedTuple):
-    """Per-slot traces of one staged run (leading runs axis under vmap)."""
+    """Per-slot traces of one staged run (leading runs axis under vmap).
+
+    The three hedge columns are all-zero for policies without the
+    ``returns_hedge`` contract (and on healthy fleets where the hedge
+    never fires), so downstream consumers need no feature detection.
+    """
 
     cost: Array           # (T,) per-slot stage-compute energy cost
     energy: Array         # (T,) PUE-weighted compute energy (unpriced)
@@ -169,6 +245,9 @@ class StagedOutputs(NamedTuple):
     wan_energy: Array     # (T,) WAN energy (job-energy equivalents)
     wan_gb: Array         # (T,) intermediate GB crossing the WAN
     completed: Array      # (T, K) jobs finishing their last stage per slot
+    hedge_cost: Array     # (T,) $ billed for speculative re-execution
+    hedge_gb: Array       # (T,) GB pulled to clone sites by hedges
+    hedged_jobs: Array    # (T,) job-units completed by speculative clones
 
 
 @functools.partial(jax.jit, static_argnames=("policy", "telemetry"))
@@ -180,6 +259,8 @@ def simulate_staged(
     key: Array,
     scalar: float | Array = 0.0,
     telemetry: TelemetryConfig | None = None,
+    health: Array | None = None,
+    link_health: Array | None = None,
 ) -> StagedOutputs | tuple[StagedOutputs, TelemetryFrame]:
     """Run one stage-structured trace-driven simulation under ``policy``.
 
@@ -204,8 +285,25 @@ def simulate_staged(
             produces (the PR-4 structure), so TRACE adds ZERO ops to the
             scan body here; the per-stage billing runs ``plan_cost``
             batched once more over ``(T, S)`` without the type-axis fold.
+        health: optional (T, N) degraded-mode factor
+            (:func:`repro.traces.faults.health_trace`): per-slot service
+            rates scale as ``mu * health``, hoisted into the trace
+            bundle before any table is derived — zero extra ops in the
+            scan body, and an all-ones trace is an exact ``* 1.0``
+            identity (``None`` leaves the jaxpr untouched).
+        link_health: optional (T, N, N) link factor
+            (:func:`repro.traces.bandwidth.link_fault_trace`): the WAN
+            bill gains the post-scan
+            :func:`repro.placement.wan.degraded_surcharge` premium —
+            degraded links cost more, severed links carrying traffic
+            bill ``inf`` — added on top of the untouched fused bill (an
+            exact ``+ 0.0`` identity on an all-nominal trace).
     """
     tel_on = _tel_enabled(telemetry)
+    if health is not None:
+        inputs = inputs._replace(
+            mu=inputs.mu * jnp.asarray(health, inputs.mu.dtype)[:, :, None]
+        )
     t_slots, k_types = inputs.arrivals.shape
     n = inputs.mu.shape[1]
     s_max = dag.s_max
@@ -232,6 +330,7 @@ def simulate_staged(
     pol = policy if getattr(policy, "staged", False) else stage_oblivious(policy)
     uses_key = getattr(pol, "consumes_key", True)
     returns_flow = getattr(pol, "returns_flow", False)
+    returns_hedge = getattr(pol, "returns_hedge", False)
     dd_varying = inputs.data_dist.ndim == 3                        # (T, K, N)
 
     if returns_flow and getattr(pol, "state_independent", False):
@@ -289,10 +388,12 @@ def simulate_staged(
         # vectorized over all T slots AFTER the scan, keeping the per-slot
         # body minimal.
         q_next, f, acc, in_stack = staged_slot_update(
-            dag, q, ret, arrivals, mu_stages, returns_flow
+            dag, q, ret, arrivals, mu_stages, returns_flow, returns_hedge
         )
 
         out = (f, acc, in_stack)
+        if returns_hedge:
+            out = out + (ret[2],)
         return ((q_next, key) if keyed else q_next), out
 
     xs = (inputs.arrivals, inputs.mu, e_cost_all, mu_stage_all, wpue_all)
@@ -301,7 +402,12 @@ def simulate_staged(
     if dd_varying:
         xs = xs + (inputs.data_dist,)
     carry0 = (q0, key) if keyed else q0
-    final_carry, (f_trace, acc_all, in_all) = jax.lax.scan(slot, carry0, xs)
+    final_carry, scan_outs = jax.lax.scan(slot, carry0, xs)
+    if returns_hedge:
+        f_trace, acc_all, in_all, g_all = scan_outs
+    else:
+        f_trace, acc_all, in_all = scan_outs
+        g_all = None
     q_final = final_carry[0] if keyed else final_carry
 
     # Everything the scan body did NOT compute, recovered vectorized over
@@ -319,10 +425,20 @@ def simulate_staged(
                    axis=(1, 2, 3))                                 # (T,)
     energy = jnp.sum(fa_all * er_stage_all.transpose(0, 3, 1, 2),
                      axis=(1, 2, 3))
-    q_next_all = jnp.maximum(acc_all - mu_stage_all, 0.0)          # (T,N,K,S)
+    if returns_hedge:
+        # The carried queues drained at the first-completion boosted
+        # rates (cond-gated in the scan body); the vectorized replay
+        # applies the same boost unconditionally — slots without a
+        # hedge add an exact ``f * 0.0`` identity, so the stats stay
+        # bitwise the scan's.
+        boost_all = jnp.sum(g_all * mu_stage_all, axis=1)          # (T,K,S)
+        mu_eff_all = mu_stage_all + f_trace * boost_all[:, None]
+    else:
+        mu_eff_all = mu_stage_all
+    q_next_all = jnp.maximum(acc_all - mu_eff_all, 0.0)            # (T,N,K,S)
     btot = jnp.sum(q_next_all, axis=(1, 2, 3))
     bavg = btot / jnp.float32(n * k_types * s_max)
-    done_all = jnp.minimum(acc_all, mu_stage_all)                  # (T,N,K,S)
+    done_all = jnp.minimum(acc_all, mu_eff_all)                    # (T,N,K,S)
     td_all = jnp.sum(done_all, axis=1)                             # (T,K,S)
     nxt = jnp.concatenate(
         [dag.stage_mask[:, 1:], jnp.zeros((k_types, 1), jnp.float32)], axis=1
@@ -343,11 +459,31 @@ def simulate_staged(
         vol_all.reshape(t_slots, s_max * k_types),
         wan, inputs.omega, inputs.pue,
     )                                                              # (T,) each
+    if link_health is not None:
+        # Degraded-link premium on the shuffle traffic, additive to the
+        # untouched fused bill (exact zero on an all-nominal trace).
+        sur_c, sur_e = degraded_surcharge(
+            src_all.reshape(t_slots, s_max * k_types, n),
+            dst_all.reshape(t_slots, s_max * k_types, n),
+            vol_all.reshape(t_slots, s_max * k_types),
+            wan, inputs.omega, inputs.pue, link_health,
+        )
+        wan_c = wan_c + sur_c
+        wan_e = wan_e + sur_e
+    if returns_hedge:
+        hedge_cost, hedge_gb, hedged_jobs = _hedge_bill(
+            dag, wan, g_all, acc_all, mu_stage_all, mu_eff_all,
+            ec_stage_all, src_all, wpue_all,
+        )
+    else:
+        zeros_t = jnp.zeros((t_slots,), jnp.float32)
+        hedge_cost = hedge_gb = hedged_jobs = zeros_t
     outs = StagedOutputs(
         cost=cost, energy=energy, backlog_total=btot, backlog_avg=bavg,
         q_final=q_final, f_trace=f_trace,
         wan_cost=wan_c, wan_energy=wan_e, wan_gb=wan_gb,
         completed=completed,
+        hedge_cost=hedge_cost, hedge_gb=hedge_gb, hedged_jobs=hedged_jobs,
     )
     if tel_on:
         # Per-stage streams, recovered from the same stacked (f, acc, ins)
@@ -395,37 +531,48 @@ def simulate_staged_many(
     n_runs: int,
     scalar: float | Array = 0.0,
     telemetry: TelemetryConfig | None = None,
+    health: Array | None = None,
+    link_health: Array | None = None,
 ) -> StagedOutputs:
     """Monte-Carlo replication of :func:`simulate_staged` (vmap over keys).
 
     Mirrors ``simulate_many``: fresh stochastic traces + policy randomness
-    per run, deterministic traces (prices, PUE, the dag, the WAN model)
-    shared. One compilation serves every run; telemetry frames (when
-    enabled) stack on the leading runs axis like every other output.
+    per run, deterministic traces (prices, PUE, the dag, the WAN model —
+    and the degraded-mode health/link traces, when given) shared. One
+    compilation serves every run; telemetry frames (when enabled) stack
+    on the leading runs axis like every other output.
     """
     keys = jax.random.split(key, n_runs)
 
     def one(run_key):
         k_build, k_sim = jax.random.split(run_key)
         return simulate_staged(
-            build_inputs(k_build), dag, wan, policy, k_sim, scalar, telemetry
+            build_inputs(k_build), dag, wan, policy, k_sim, scalar,
+            telemetry, health, link_health,
         )
 
     return jax.vmap(one)(keys)
 
 
 def summarize_staged(outs: StagedOutputs) -> dict:
-    """Time-averaged scalars incl. the shuffle WAN bill (any runs axis)."""
+    """Time-averaged scalars incl. the shuffle WAN bill (any runs axis).
+
+    The total includes the speculative re-execution bill (zero for
+    hedge-free runs, so pre-hedging totals are unchanged).
+    """
     compute = jnp.mean(outs.cost)
     wan = jnp.mean(outs.wan_cost)
+    hedge = jnp.mean(outs.hedge_cost)
     return {
         "time_avg_compute_cost": float(compute),
         "time_avg_wan_cost": float(wan),
-        "time_avg_total_cost": float(compute + wan),
+        "time_avg_hedge_cost": float(hedge),
+        "time_avg_total_cost": float(compute + wan + hedge),
         "time_avg_energy": float(jnp.mean(outs.energy)),
         "time_avg_backlog": float(jnp.mean(outs.backlog_avg)),
         "total_wan_gb": float(jnp.mean(jnp.sum(outs.wan_gb, axis=-1))),
         "jobs_completed": float(jnp.mean(jnp.sum(outs.completed, axis=(-2, -1)))),
+        "hedged_jobs": float(jnp.mean(jnp.sum(outs.hedged_jobs, axis=-1))),
         "final_backlog_total": float(
             jnp.mean(outs.q_final.sum(axis=(-3, -2, -1)))
         ),

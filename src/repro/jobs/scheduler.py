@@ -119,7 +119,45 @@ def staged_stage_scores(
     return drift_plus_penalty_scores(q_s, total_in, mu_s, e_stage, v)
 
 
-def make_staged_policy(dag: StageDag, wan: WanModel, pin_map: bool = True):
+def hedge_clone_choice(
+    f_s: Array, mu_s: Array, stage_mask_s: Array, hedge: float
+) -> tuple[Array, Array]:
+    """Speculative re-execution decision for one stage: clone site + boost.
+
+    The straggler signal is *relative*: the dispatched sites' effective
+    service rate ``mu_p = Σ_n f·mu`` (exact for one-hot downstream
+    choices; the f-weighted mean for the fractional pinned map) against
+    the best alternative site ``r = argmax_n mu·(1 - f)`` — high spare
+    rate, low current share. The hedge fires when ``mu_p < hedge·mu_r``:
+    the dispatch target is running at less than ``hedge`` of what the
+    runner-up could deliver, so the stage is cloned there.
+
+    First-completion enters the fluid recursion as a service-rate boost
+    at the dispatched sites: the clone re-executes the same queued work,
+    and whichever copy finishes first completes the job, so the stage's
+    drain rate rises by the clone's rate — ``mu_eff = mu + f·boost``
+    with ``boost = mu_r`` where the hedge fired, 0 elsewhere (an exact
+    ``+ 0.0`` identity when nothing fires). The engine bills the work
+    the clone actually completes (the boost-attributable completions) at
+    the clone site's energy price plus the WAN pull of its inputs.
+
+    Returns:
+        (g_s, boost): the (N, K) one-hot clone matrix (zero columns
+        where the hedge did not fire) and the (K,) rate boost.
+    """
+    n = f_s.shape[0]
+    mu_p = jnp.sum(f_s * mu_s, axis=0)                         # (K,)
+    alt = mu_s * (1.0 - f_s)                                   # (N, K)
+    r_hot = (
+        jnp.arange(n)[:, None] == jnp.argmax(alt, axis=0)[None]
+    ).astype(f_s.dtype)                                        # (N, K)
+    mu_r = jnp.sum(r_hot * mu_s, axis=0)                       # (K,)
+    fire = ((mu_p < hedge * mu_r) & (stage_mask_s > 0.0)).astype(f_s.dtype)
+    return r_hot * fire[None, :], mu_r * fire
+
+
+def make_staged_policy(dag: StageDag, wan: WanModel, pin_map: bool = True,
+                       hedge: float | None = None):
     """Stage-aware GMSA: per-stage LP-vertex dispatch with WAN pricing.
 
     Returns a policy with the staged signature
@@ -135,6 +173,14 @@ def make_staged_policy(dag: StageDag, wan: WanModel, pin_map: bool = True):
         pin_map: pin stage 0 to ``data_dist`` (data-local map). When
             False, stage 0 is score-chosen like any other stage — only
             meaningful when the dag bills a stage-0 input pull.
+        hedge: speculative re-execution threshold (``None`` disables —
+            the policy keeps its exact pre-hedging contract). When set,
+            each stage whose dispatched service rate falls below
+            ``hedge`` times the runner-up site's rate is cloned there
+            (:func:`hedge_clone_choice`), the within-slot flow walk runs
+            on the first-completion boosted rates, and the policy
+            additionally returns the (N, K, S) clone matrix
+            (``returns_hedge`` contract of ``simulate_staged``).
     """
 
     def policy(key, q, arrivals, mu, e, aux, scalar):
@@ -144,7 +190,7 @@ def make_staged_policy(dag: StageDag, wan: WanModel, pin_map: bool = True):
         mu_stages = stage_service_rates(mu, dag)                   # (N, K, S)
         total_in = arrivals                                        # (K,)
         src = data_dist                                            # (K, N)
-        cols, ins = [], []
+        cols, ins, clones = [], [], []
         for s in range(dag.s_max):
             mu_s = mu_stages[:, :, s]
             if s == 0 and pin_map:
@@ -166,6 +212,16 @@ def make_staged_policy(dag: StageDag, wan: WanModel, pin_map: bool = True):
                 ).astype(q.dtype)                                  # (N, K)
             cols.append(f_s)
             ins.append(total_in)
+            if hedge is not None:
+                # Clone stragglers to the runner-up and walk the flow on
+                # the boosted (first-completion) rates — the engine
+                # re-derives the identical boost from g, so the exported
+                # inflows replay bit-for-bit.
+                g_s, boost = hedge_clone_choice(
+                    f_s, mu_s, dag.stage_mask[:, s], hedge
+                )
+                clones.append(g_s)
+                mu_s = mu_s + f_s * boost[None, :]
             total_done, src = flow_step(q[:, :, s], f_s, total_in, mu_s)
             if s + 1 < dag.s_max:
                 total_in = total_done * dag.stage_mask[:, s + 1]
@@ -173,18 +229,23 @@ def make_staged_policy(dag: StageDag, wan: WanModel, pin_map: bool = True):
         # engine would re-derive (flow_step is the shared definition), so
         # export the per-stage inflows and let the engine skip its own
         # recursion (``returns_flow`` contract of ``simulate_staged``).
-        return jnp.stack(cols, axis=-1), jnp.stack(ins, axis=-1)   # f, (K, S)
+        f = jnp.stack(cols, axis=-1)
+        in_stack = jnp.stack(ins, axis=-1)                         # (K, S)
+        if hedge is not None:
+            return f, in_stack, jnp.stack(clones, axis=-1)
+        return f, in_stack
 
     policy.staged = True
     policy.consumes_key = False
     policy.returns_flow = True
+    policy.returns_hedge = hedge is not None
     return policy
 
 
 def staged_dispatch_fn(dag: StageDag, wan: WanModel, v: float,
-                       pin_map: bool = True):
+                       pin_map: bool = True, hedge: float | None = None):
     """Closure adapter binding a static V (one compilation per V)."""
-    base = make_staged_policy(dag, wan, pin_map=pin_map)
+    base = make_staged_policy(dag, wan, pin_map=pin_map, hedge=hedge)
 
     def policy(key, q, arrivals, mu, e, aux, scalar):
         del scalar
@@ -193,6 +254,7 @@ def staged_dispatch_fn(dag: StageDag, wan: WanModel, v: float,
     policy.staged = True
     policy.consumes_key = False
     policy.returns_flow = True
+    policy.returns_hedge = hedge is not None
     return policy
 
 

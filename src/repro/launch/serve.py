@@ -34,7 +34,10 @@ def build_engine(classes: list[str], slots: int, v: float, seed: int = 0,
                  arrival: float = 6.0, n_pods: int = 4,
                  admit_max: float | None = None, dispatch: str = "staged",
                  alive: np.ndarray | None = None,
-                 telemetry: TelemetryConfig | None = None) -> FleetEngine:
+                 telemetry: TelemetryConfig | None = None,
+                 health: np.ndarray | None = None,
+                 link_health: np.ndarray | None = None,
+                 hedge: float | None = None) -> FleetEngine:
     key = jax.random.key(seed)
     k1, k2, k3, k4 = jax.random.split(key, 4)
     # Pods beyond the four Facebook DCs reuse their site climates (cycled).
@@ -55,11 +58,12 @@ def build_engine(classes: list[str], slots: int, v: float, seed: int = 0,
     r = np.asarray(build_task_allocation(layout, up, down, manager_share=0.62))
     fcfg = FleetConfig(
         n_pods=n_pods, horizon_slots=slots, v=v, seed=seed,
-        admit_max=admit_max, dispatch=dispatch,
+        admit_max=admit_max, dispatch=dispatch, hedge_threshold=hedge,
     )
     return FleetEngine(
         fcfg, rcs, omega, pue, r,
         up=up, down=down, layout=layout, alive=alive, telemetry=telemetry,
+        health=health, link_health=link_health,
     )
 
 
@@ -76,6 +80,13 @@ def main(argv=None):
                     default="staged")
     ap.add_argument("--kill", default=None, metavar="POD:SLOT",
                     help="kill pod POD at slot SLOT (recovery drain demo)")
+    ap.add_argument("--straggle", default=None, metavar="POD:SLOT:FACTOR",
+                    help="degrade pod POD to FACTOR of its service rate "
+                         "from slot SLOT on (straggler demo)")
+    ap.add_argument("--hedge", type=float, default=None,
+                    help="speculative re-execution threshold (clone a "
+                         "stage when its pod's rate falls below this "
+                         "fraction of the runner-up's)")
     ap.add_argument("--no-exec", action="store_true",
                     help="skip real model execution (dispatch-only)")
     ap.add_argument("--seed", type=int, default=0)
@@ -86,11 +97,16 @@ def main(argv=None):
         pod, slot = (int(x) for x in args.kill.split(":"))
         alive = np.ones((args.slots, args.pods), np.float32)
         alive[slot:, pod] = 0.0
+    health = None
+    if args.straggle:
+        pod, slot, factor = args.straggle.split(":")
+        health = np.ones((args.slots, args.pods), np.float32)
+        health[int(slot):, int(pod)] = float(factor)
 
     engine = build_engine(
         args.classes.split(","), args.slots, args.v, args.seed, args.arrival,
         n_pods=args.pods, admit_max=args.admit_max, dispatch=args.dispatch,
-        alive=alive,
+        alive=alive, health=health, hedge=args.hedge,
     )
     out = engine.run(execute_real=not args.no_exec)
     print(f"slots={args.slots} classes={args.classes} pods={args.pods} "
@@ -99,6 +115,9 @@ def main(argv=None):
           f"({out['mean_cost']*1e6:.3f} µ$)")
     print(f"KV-handoff WAN bill : {out['wan_cost'].sum():.3e} $ "
           f"({out['wan_gb'].sum():.2f} GB)")
+    if args.hedge is not None:
+        print(f"hedge bill          : {out['hedge_cost'].sum():.3e} $ "
+              f"({out['hedged_jobs'].sum():.2f} jobs re-executed)")
     print(f"total billed        : {out['total_billed_cost']:.3e} $")
     print(f"final total backlog : {out['final_backlog']:.1f}")
     print(f"admitted/rejected   : {out['admitted'].sum():.0f} / "

@@ -66,6 +66,7 @@ from repro.telemetry.ring import (
     EV_EPOCH,
     EV_INGEST_REDIRECT,
     EV_RECOVERY,
+    EV_REPAIR,
     TelemetryFrame,
     ring_init,
     ring_push,
@@ -73,8 +74,11 @@ from repro.telemetry.ring import (
 from repro.traces.datasets import io_slowdown_from_bandwidth
 from repro.placement.wan import (
     DEFAULT_ENERGY_PER_GB,
+    degraded_surcharge,
     evacuation_cost,
+    evacuation_plan,
     plan_cost,
+    transfer_cost,
     transfer_latency,
     transfer_plan,
     wan_topology,
@@ -97,6 +101,29 @@ def survivor_renorm(masked: Array, fallback: Array, axis: int = -1) -> Array:
 
 
 _survivor_renorm = survivor_renorm   # internal call sites / back-compat
+
+
+def region_averse_weights(alive: Array, regions: Array) -> Array:
+    """Survivor weights that shy away from regions already seeing deaths.
+
+    Correlated outages share fate within a region (one grid feed, one
+    fiber bundle — :func:`repro.traces.faults.regional_health_trace`), so
+    a survivor in a region where peers just died is a worse re-placement
+    target than an equally-capable survivor in an untouched region. Each
+    survivor's weight is ``alive * (1 - dead_fraction_of_its_region)`` —
+    computed with the O(N^2) same-region mask, so the region count never
+    needs to be static. With every site alive the dead fraction is zero
+    and the weights are exactly ``alive`` (the ``* 1.0`` identity); a
+    survivor's weight stays strictly positive (a region with a survivor
+    is never fully dead), so renormalization never degenerates beyond
+    what plain ``alive`` weighting allows.
+    """
+    regions = jnp.asarray(regions)
+    same = (regions[:, None] == regions[None, :]).astype(alive.dtype)
+    dead_frac = (same @ (1.0 - alive)) / jnp.maximum(
+        jnp.sum(same, axis=1), 1.0
+    )
+    return alive * (1.0 - dead_frac)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -216,6 +243,9 @@ def simulate_placed(
     alive: Array | None = None,
     move_budget: Array | None = None,
     telemetry: TelemetryConfig | None = None,
+    health: Array | None = None,
+    link_health: Array | None = None,
+    regions: Array | None = None,
 ) -> PlacedOutputs | tuple[PlacedOutputs, TelemetryFrame]:
     """Run the two-timescale controller over one trace.
 
@@ -261,6 +291,34 @@ def simulate_placed(
             dead sites — pushed right next to the ``lax.cond`` death
             edge) and every dead-site ingest redirect. Enabled levels
             return ``(outputs, TelemetryFrame)``.
+        health: optional (T, N) per-slot site health factor in [0, 1]
+            (:func:`repro.traces.faults.health_trace`). Degraded-mode
+            generalization of ``alive``: the factor scales the service
+            rates (a 0.3-health site is a 3.3x straggler), hoisted into
+            the mu trace before the scan so the slot body is untouched.
+            All-ones health is the ``* 1.0`` identity — bitwise the
+            no-health outputs. Death semantics (queue wipe, burst,
+            re-placement) stay with ``alive``; compose the two via
+            :func:`repro.traces.faults.health_to_alive` when stragglers
+            may also die.
+        link_health: optional (T, N, N) per-link WAN health factor
+            (:func:`repro.traces.bandwidth.link_fault_trace`). Degraded
+            links surcharge every epoch-boundary move by
+            ``price * (1/health - 1)`` and stretch the reported move
+            latency; severed links price to ``inf`` when crossed. On a
+            recovery edge the evacuation routes around severed links
+            (:func:`repro.placement.wan.evacuation_plan`) and bills the
+            degraded premium of the routed burst. All-alive links
+            surcharge exactly ``0.0`` — the ``+ 0.0`` identity keeps
+            the bills bitwise.
+        regions: optional (N,) int region assignment
+            (:func:`repro.traces.faults.region_assignment`); requires
+            ``alive``. Survivor renormalization of the placement targets
+            becomes shared-fate averse: survivors in regions already
+            seeing deaths are downweighted by their region's dead
+            fraction, so re-placement and evacuated data prefer
+            untouched regions. With every site alive the weights
+            collapse to ``alive`` exactly.
     """
     tel_on = _tel_enabled(telemetry)
     tel_trace = _tel_tracing(telemetry)
@@ -274,6 +332,28 @@ def simulate_placed(
     if t_slots % w != 0:
         raise ValueError(f"T={t_slots} must be a multiple of W={w}")
     n_epochs = t_slots // w
+
+    if health is not None:
+        health = jnp.asarray(health, jnp.float32)
+        if health.shape != (t_slots, n):
+            raise ValueError(f"health must be (T={t_slots}, N={n}), "
+                             f"got {health.shape}")
+        # Hoisted: stragglers serve slower everywhere downstream, the
+        # slot body never sees the factor. All-ones is * 1.0 exactly.
+        inputs = inputs._replace(
+            mu=inputs.mu * health[:, :, None].astype(inputs.mu.dtype)
+        )
+    linky = link_health is not None
+    if linky:
+        link_health = jnp.asarray(link_health, jnp.float32)
+        if link_health.shape != (t_slots, n, n):
+            raise ValueError(
+                f"link_health must be (T={t_slots}, N={n}, N={n}), "
+                f"got {link_health.shape}"
+            )
+    if regions is not None and alive is None:
+        raise ValueError("regions requires an alive mask (shared-fate "
+                         "aversion only matters under site loss)")
 
     faulty = alive is not None
     if faulty:
@@ -344,6 +424,8 @@ def simulate_placed(
         if tel_trace:
             e_idx, t_e = rest[-2], rest[-1]
             rest = rest[:-2]
+        if linky:
+            lh_e, rest = rest[-1], rest[:-1]
         if faulty:
             alive_e, alive_prev_e = rest
             # Aliveness *entering* the epoch drives the boundary decision;
@@ -393,8 +475,11 @@ def simulate_placed(
         target = rule(d_drift, obs)
         if faulty:
             # The controller enforces survivor-only targets regardless of
-            # whether the plugged-in rule is survivor-aware.
-            t_m = _survivor_renorm(target * alive_b[None, :], d_drift, axis=1)
+            # whether the plugged-in rule is survivor-aware; with regions
+            # the weights are additionally shared-fate averse.
+            surv_b = (alive_b if regions is None
+                      else region_averse_weights(alive_b, regions))
+            t_m = _survivor_renorm(target * surv_b[None, :], d_drift, axis=1)
             target = jnp.where(any_dead_b, t_m, target)
         stepped = d_drift + mb * (target - d_drift)
         stepped = stepped / jnp.maximum(jnp.sum(stepped, axis=1, keepdims=True), _EPS)
@@ -404,7 +489,22 @@ def simulate_placed(
         # latency, which needs the per-link bytes.
         wan_c, wan_e, wan_gb = plan_cost(d_drift, d_new, size_e, wan,
                                          om_e[0], pu_e[0])
-        wan_lat = transfer_latency(transfer_plan(d_drift, d_new, size_e), wan)
+        if linky:
+            # Degraded links enter as an additive premium on the fused
+            # bill (exactly 0.0 on all-alive links) and stretch the
+            # bottleneck latency of the boundary move.
+            lh_b = lh_e[0]
+            sur_c, sur_e = degraded_surcharge(
+                d_drift, d_new, size_e, wan, om_e[0], pu_e[0], lh_b
+            )
+            wan_c, wan_e = wan_c + sur_c, wan_e + sur_e
+            wan_lat = transfer_latency(
+                transfer_plan(d_drift, d_new, size_e), wan, link_health=lh_b
+            )
+        else:
+            wan_lat = transfer_latency(
+                transfer_plan(d_drift, d_new, size_e), wan
+            )
         # Ongoing replication premium: every epoch, each replica beyond the
         # first absorbs update_fraction of its dataset at the epoch-mean price.
         sync_c = replica_sync_cost(
@@ -469,6 +569,8 @@ def simulate_placed(
                     t_t, rest2 = rest2[-1], rest2[:-1]
                 if cfg.io_coupling:
                     mu_raw_t, rest2 = rest2[-1], rest2[:-1]
+                if linky:
+                    lh_t, rest2 = rest2[-1], rest2[:-1]
                 alive_t, alive_prev_t, om_t, pu_t = rest2
                 died = alive_prev_t * (1.0 - alive_t)                 # (N,)
                 any_died = jnp.any(died > 0.5)
@@ -495,8 +597,10 @@ def simulate_placed(
                         wpue_bar=wpue_t, mu_bar=mu_r, q=q_r,
                         sizes_gb=size_e, capacity_gb=cap, alive=alive_t,
                     )
+                    surv_t = (alive_t if regions is None
+                              else region_averse_weights(alive_t, regions))
                     tgt = _survivor_renorm(
-                        rule(d_drop_r, obs_r) * alive_t[None, :],
+                        rule(d_drop_r, obs_r) * surv_t[None, :],
                         d_drop_r, axis=1,
                     )
                     d_rec = d_drop_r + mb * (tgt - d_drop_r)
@@ -512,6 +616,23 @@ def simulate_placed(
                     mv_c, _, mv_g = plan_cost(
                         d_drop_r, d_rec, size_e, wan, om_t, pu_t
                     )
+                    if linky:
+                        # Route the evacuation around severed links and
+                        # bill the degraded premium of the routed burst
+                        # plus the move's surcharge — all inside the cond's
+                        # heavy branch, and every term exactly 0.0 when
+                        # the links are all alive (the bills stay bitwise).
+                        plan_r = evacuation_plan(
+                            d_masked_r, d_drop_r, size_e, link_health=lh_t
+                        )
+                        deg_c, _, _ = transfer_cost(
+                            plan_r, wan, om_t, pu_t, link_health=lh_t
+                        )
+                        nom_c, _, _ = transfer_cost(plan_r, wan, om_t, pu_t)
+                        msur_c, _ = degraded_surcharge(
+                            d_drop_r, d_rec, size_e, wan, om_t, pu_t, lh_t
+                        )
+                        ev_c = ev_c + (deg_c - nom_c) + msur_c
                     r_rec = rebuild(d_rec) * alive_t[None, None, :]
                     r_rec = r_rec / jnp.maximum(
                         jnp.sum(r_rec, axis=-1, keepdims=True), _EPS
@@ -534,6 +655,17 @@ def simulate_placed(
                         ring2, any_died, t_t, EV_RECOVERY,
                         (rec_gb, rec_cost, jnp.sum(died),
                          jnp.argmax(died).astype(jnp.float32)),
+                    )
+                    # Revival edge: the companion event the SLO clock
+                    # anchors to (time-to-SLO from the true repair slot,
+                    # not the death slot — :mod:`repro.telemetry.collect`
+                    # pairs the two). Masked write: an all-ones mask
+                    # leaves the ring bitwise untouched.
+                    revived = alive_t * (1.0 - alive_prev_t)
+                    ring2 = ring_push(
+                        ring2, jnp.any(revived > 0.5), t_t, EV_REPAIR,
+                        (jnp.sum(revived),
+                         jnp.argmax(revived).astype(jnp.float32)),
                     )
                 # Epoch tables go stale the moment a recovery re-places
                 # mid-epoch; re-derive this slot's row from the carried r
@@ -594,6 +726,8 @@ def simulate_placed(
             slot_xs = slot_xs + (keys_e,)
         if faulty:
             slot_xs = slot_xs + (alive_e, alive_prev_e, om_e, pu_e)
+            if linky:
+                slot_xs = slot_xs + (lh_e,)
             if cfg.io_coupling:
                 slot_xs = slot_xs + (mu_e_raw,)
             if tel_trace:
@@ -625,6 +759,8 @@ def simulate_placed(
         xs = xs + (keys_ep,)
     if faulty:
         xs = xs + (ep(alive), ep(alive_prev))
+    if linky:
+        xs = xs + (ep(link_health),)
     carry_init = (q0, key, d0)
     if tel_trace:
         xs = xs + (jnp.arange(n_epochs, dtype=jnp.int32),
@@ -690,14 +826,18 @@ def simulate_placed_many(
     alive: Array | None = None,
     move_budget: Array | None = None,
     telemetry: TelemetryConfig | None = None,
+    health: Array | None = None,
+    link_health: Array | None = None,
+    regions: Array | None = None,
 ) -> PlacedOutputs:
     """Monte-Carlo replication of :func:`simulate_placed` (vmap over keys).
 
     Mirrors ``simulate_many``: fresh stochastic traces + policy randomness
-    per run, deterministic traces (prices, PUE, drift, the site-alive mask)
-    shared. One compilation serves every run. With telemetry enabled the
-    frames stack on the runs axis like everything else — decode one run's
-    lane with :func:`repro.telemetry.collect.collect_records`.
+    per run, deterministic traces (prices, PUE, drift, the site-alive mask
+    and the health/link-health factors) shared. One compilation serves
+    every run. With telemetry enabled the frames stack on the runs axis
+    like everything else — decode one run's lane with
+    :func:`repro.telemetry.collect.collect_records`.
     """
     keys = jax.random.split(key, n_runs)
 
@@ -706,7 +846,8 @@ def simulate_placed_many(
         return simulate_placed(
             build_inputs(k_build), up, down, policy, rule, k_sim, cfg,
             scalar=scalar, ingest=ingest, sizes_gb=sizes_gb, alive=alive,
-            move_budget=move_budget, telemetry=telemetry,
+            move_budget=move_budget, telemetry=telemetry, health=health,
+            link_health=link_health, regions=regions,
         )
 
     return jax.vmap(one)(keys)

@@ -57,7 +57,9 @@ def wan_topology(
     return WanModel(up, down, bw, jnp.asarray(energy_per_gb, jnp.float32))
 
 
-def link_price_matrix(per_site: Array, local_free: bool = True) -> Array:
+def link_price_matrix(
+    per_site: Array, local_free: bool = True, link_health: Array | None = None
+) -> Array:
     """(N, N) endpoint-mean link weights: 0.5 * (w_i + w_j) for i -> j.
 
     The single definition of "a byte on link i->j draws its energy half
@@ -69,11 +71,24 @@ def link_price_matrix(per_site: Array, local_free: bool = True) -> Array:
     ``local_free`` zeroes the diagonal (intra-site hand-offs are free) —
     what every consumer scoring *candidate* destinations wants; plan
     pricing may keep it, since transfer plans carry zero diagonals.
+
+    ``link_health`` (optional (N, N) factor in [0, 1]) surcharges
+    degraded links by the reciprocal of their health — a link at 50%
+    capacity retransmits/reroutes into double the per-byte bill — and
+    prices severed links (health 0) to ``inf`` so any plan that insists
+    on crossing a partition bills loudly rather than silently. Note the
+    rank-2 structure the fused ``plan_cost`` path exploits does NOT
+    survive an arbitrary health matrix; degraded pricing is for the
+    materialized (epoch-boundary / post-scan) paths only.
     """
     n = per_site.shape[0]
     price = 0.5 * (per_site[:, None] + per_site[None, :])
     if local_free:
         price = jnp.where(jnp.eye(n, dtype=bool), 0.0, price)
+    if link_health is not None:
+        health = jnp.asarray(link_health, price.dtype)
+        price = jnp.where(health > 0.0, price / jnp.maximum(health, 1e-9),
+                          jnp.inf)
     return price
 
 
@@ -86,23 +101,29 @@ def transfer_plan(d_old: Array, d_new: Array, sizes_gb: Array) -> Array:
     exact on total bytes and jit-safe (no sorting / matching).
 
     Args:
-        d_old: (K, N) current placement (rows on the simplex).
-        d_new: (K, N) target placement.
-        sizes_gb: (K,) dataset sizes in GB.
+        d_old: (..., K, N) current placement (rows on the simplex).
+        d_new: (..., K, N) target placement.
+        sizes_gb: (..., K) dataset sizes in GB.
 
     Returns:
-        (K, N, N) plan with plan[k, i, j] GB moving i -> j; zero diagonal.
+        (..., K, N, N) plan with plan[..., k, i, j] GB moving i -> j;
+        zero diagonal. Leading batch dims broadcast like
+        :func:`plan_cost` (e.g. a (T, K, N) trace of placements prices
+        every slot's plan in one call).
     """
-    delta = d_new - d_old                                        # (K, N)
-    out_gb = jnp.maximum(-delta, 0.0) * sizes_gb[:, None]        # exports
-    in_gb = jnp.maximum(delta, 0.0) * sizes_gb[:, None]          # imports
-    total = jnp.sum(in_gb, axis=1, keepdims=True)                # (K, 1)
-    share = in_gb / jnp.maximum(total, 1e-12)                    # (K, N)
-    return out_gb[:, :, None] * share[:, None, :]                # (K, N, N)
+    delta = d_new - d_old                                        # (..., K, N)
+    out_gb = jnp.maximum(-delta, 0.0) * sizes_gb[..., None]      # exports
+    in_gb = jnp.maximum(delta, 0.0) * sizes_gb[..., None]        # imports
+    total = jnp.sum(in_gb, axis=-1, keepdims=True)               # (..., K, 1)
+    share = in_gb / jnp.maximum(total, 1e-12)                    # (..., K, N)
+    return out_gb[..., :, None] * share[..., None, :]            # (..., K, N, N)
 
 
 def evacuation_plan(
-    d_masked: Array, d_drop: Array, sizes_gb: Array
+    d_masked: Array,
+    d_drop: Array,
+    sizes_gb: Array,
+    link_health: Array | None = None,
 ) -> Array:
     """(K, N, N) emergency re-replication traffic after a site loss.
 
@@ -123,6 +144,14 @@ def evacuation_plan(
             output — dead columns zeroed, NOT renormalized).
         d_drop: (K, N) survivor layout after renormalization (rows sum 1).
         sizes_gb: (K,) dataset sizes in GB.
+        link_health: optional (N, N) link factor — severed links
+            (health 0) are excluded as sources, so the plan routes the
+            re-replication traffic *around* the partition. Destinations
+            whose every usable source link is severed fall back to the
+            fault-oblivious weights (the bytes still flow, conserving
+            GB, and :func:`transfer_cost` with the same ``link_health``
+            prices them to ``inf`` — a partition you cannot route
+            around is loud, not lossy).
 
     Returns:
         (K, N, N) plan with plan[k, i, j] GB moving i -> j.
@@ -132,6 +161,11 @@ def evacuation_plan(
     lost_all = jnp.sum(d_masked, axis=1, keepdims=True) <= 1e-9
     src = jnp.where(lost_all, d_drop, d_masked)                      # (K, N)
     w = src[:, :, None] * (1.0 - jnp.eye(n, dtype=src.dtype))[None]  # (K,i,j)
+    if link_health is not None:
+        usable = (jnp.asarray(link_health, src.dtype) > 0.0)
+        w_routed = w * usable[None].astype(src.dtype)
+        routable = jnp.sum(w_routed, axis=1, keepdims=True) > 1e-12
+        w = jnp.where(routable, w_routed, w)
     w = w / jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-12)
     return w * need[:, None, :]
 
@@ -265,37 +299,117 @@ def expected_pull(
 
 
 def transfer_cost(
-    plan_gb: Array, wan: WanModel, omega: Array, pue: Array
+    plan_gb: Array,
+    wan: WanModel,
+    omega: Array,
+    pue: Array,
+    link_health: Array | None = None,
 ) -> tuple[Array, Array, Array]:
     """Price the WAN bytes of one re-placement event.
 
     Energy for a byte on link i->j is drawn half at each endpoint, at that
-    endpoint's PUE, and billed at that endpoint's current price.
+    endpoint's PUE, and billed at that endpoint's current price. With
+    ``link_health``, degraded links bill at ``price / health`` and bytes
+    on a severed link bill ``inf`` (zero bytes on a severed link bill
+    exactly zero — a plan that routes around the partition stays
+    finite).
 
     Args:
         plan_gb: (K, N, N) bytes moved per link (from :func:`transfer_plan`).
         wan: the :class:`WanModel`.
         omega: (N,) prices at the epoch boundary.
         pue: (N,) PUE at the epoch boundary.
+        link_health: optional (N, N) per-link health factor.
 
     Returns:
         (cost, energy, gb_moved) scalars — $ cost, PUE-weighted energy in
         job-equivalents, and total GB crossing the WAN.
     """
     wpue = omega * pue                                           # (N,)
-    link_price = link_price_matrix(wpue, local_free=False)       # (N, N)
-    link_energy = link_price_matrix(pue, local_free=False)
+    link_price = link_price_matrix(wpue, local_free=False,
+                                   link_health=link_health)      # (N, N)
+    link_energy = link_price_matrix(pue, local_free=False,
+                                    link_health=link_health)
     gb_links = jnp.sum(plan_gb, axis=0)                          # (N, N)
-    cost = wan.energy_per_gb * jnp.sum(gb_links * link_price)
-    energy = wan.energy_per_gb * jnp.sum(gb_links * link_energy)
+    if link_health is None:
+        cost = wan.energy_per_gb * jnp.sum(gb_links * link_price)
+        energy = wan.energy_per_gb * jnp.sum(gb_links * link_energy)
+    else:
+        # 0 GB * inf price must stay 0, not NaN.
+        moved = gb_links > 0.0
+        cost = wan.energy_per_gb * jnp.sum(
+            jnp.where(moved, gb_links * link_price, 0.0))
+        energy = wan.energy_per_gb * jnp.sum(
+            jnp.where(moved, gb_links * link_energy, 0.0))
     return cost, energy, jnp.sum(gb_links)
 
 
-def transfer_latency(plan_gb: Array, wan: WanModel) -> Array:
+def transfer_latency(
+    plan_gb: Array, wan: WanModel, link_health: Array | None = None
+) -> Array:
     """Bottleneck completion time (seconds) of a re-placement event.
 
     Links run in parallel; the event finishes when the slowest link drains:
-    ``max_ij plan[i, j] * 8 / bw[i, j]`` (GB -> Gb over Gb/s).
+    ``max_ij plan[i, j] * 8 / bw[i, j]`` (GB -> Gb over Gb/s). With
+    ``link_health``, a degraded link runs at ``bw * health`` — the event
+    slows by the worst degraded link it crosses — and bytes on a severed
+    link never finish (``inf``); links the plan does not use contribute
+    nothing regardless of their health.
     """
     gb_links = jnp.sum(plan_gb, axis=0)                          # (N, N)
-    return jnp.max(gb_links * 8.0 / wan.link_bw)
+    if link_health is None:
+        return jnp.max(gb_links * 8.0 / wan.link_bw)
+    bw = wan.link_bw * jnp.asarray(link_health, gb_links.dtype)
+    # gb > 0 on a severed link divides to inf; unused links pin to 0 so
+    # a 0/0 on a severed-but-unused link cannot leak NaN into the max.
+    secs = jnp.where(gb_links > 0.0, gb_links * 8.0 / bw, 0.0)
+    return jnp.max(secs)
+
+
+def degraded_surcharge(
+    src: Array,
+    dst: Array,
+    vol: Array,
+    wan: WanModel,
+    omega: Array,
+    pue: Array,
+    link_health: Array,
+) -> tuple[Array, Array]:
+    """Extra (cost, energy) billed on degraded links, additive to the fused bill.
+
+    The fused :func:`plan_cost` bill prices every byte at the *nominal*
+    endpoint-mean link price (its rank-2 structure does not survive an
+    arbitrary (N, N) health matrix), so degraded-link pricing enters as a
+    **surcharge** on top: materialize the product-coupling plan, and bill
+    each link's bytes the difference ``price * (1/health - 1)`` — zero on
+    nominal links, ``inf`` on severed links carrying traffic. On an
+    all-nominal trace the surcharge is exactly ``0.0`` everywhere, so
+    ``fused_bill + surcharge`` stays bitwise the fused bill — the
+    degraded path collapses to the fast path by the ``+ 0.0`` identity.
+
+    Args:
+        src/dst: (..., K, N) per-shuffle source/destination mixes.
+        vol: (..., K) GB per shuffle.
+        omega/pue: (..., N) per-slot prices / PUE.
+        link_health: (..., N, N) link factor aligned with the batch dims.
+
+    Returns:
+        (cost, energy) — each (...,), the degraded-link premium.
+    """
+    plans = transfer_plan(src, dst, vol)                     # (..., K, N, N)
+    gb_links = jnp.sum(plans, axis=-3)                       # (..., N, N)
+    health = jnp.asarray(link_health, gb_links.dtype)
+    premium = jnp.where(
+        health > 0.0, 1.0 / jnp.maximum(health, 1e-9) - 1.0, jnp.inf
+    )
+    wpue = omega * pue
+
+    def bill(w: Array) -> Array:
+        price = 0.5 * (w[..., :, None] + w[..., None, :])    # (..., N, N)
+        extra = gb_links * price * premium
+        # 0 GB on a severed link must bill 0, not NaN.
+        return wan.energy_per_gb * jnp.sum(
+            jnp.where(gb_links > 0.0, extra, 0.0), axis=(-2, -1)
+        )
+
+    return bill(wpue), bill(pue)

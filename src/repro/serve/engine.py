@@ -52,7 +52,12 @@ from repro.configs.base import ModelConfig
 from repro.core.gmsa import make_kernel_policy
 from repro.core.simulator import SimInputs, _energy_tables
 from repro.jobs.dag import StageDag, chain_dag
-from repro.jobs.engine import staged_shuffle_mixes, staged_slot_update
+from repro.jobs.engine import (
+    _hedge_bill,
+    hedged_mu,
+    staged_shuffle_mixes,
+    staged_slot_update,
+)
 from repro.jobs.scheduler import (
     make_staged_policy,
     stage_oblivious,
@@ -61,7 +66,12 @@ from repro.jobs.scheduler import (
 from repro.models.lm import init_params
 from repro.placement.controller import survivor_renorm
 from repro.placement.replica import replica_read_assignment
-from repro.placement.wan import WanModel, plan_cost, wan_topology
+from repro.placement.wan import (
+    WanModel,
+    degraded_surcharge,
+    plan_cost,
+    wan_topology,
+)
 from repro.serve.step import make_local_exec
 from repro.telemetry.config import TelemetryConfig
 from repro.telemetry.config import histograms as _tel_hist
@@ -157,6 +167,12 @@ class FleetConfig:
                                   # drained job executes)
     dispatch: str = "staged"      # "staged" (joint stage scheduler) or
                                   # "kernel" (gmsa_dispatch impl="kernel")
+    hedge_threshold: float | None = None
+                                  # speculative re-execution: clone a
+                                  # dispatched stage to the runner-up pod
+                                  # when its effective service rate falls
+                                  # below this fraction of the runner-up's
+                                  # (staged dispatch only; None = off)
 
     def __post_init__(self):
         shares = tuple(float(s) for s in self.capacity_shares)
@@ -169,6 +185,15 @@ class FleetConfig:
             object.__setattr__(self, "capacity_shares", shares)
         if self.dispatch not in ("staged", "kernel"):
             raise ValueError(f"unknown dispatch impl {self.dispatch!r}")
+        if self.hedge_threshold is not None:
+            if self.dispatch != "staged":
+                raise ValueError(
+                    "hedge_threshold requires the staged dispatcher"
+                )
+            if not self.hedge_threshold > 0.0:
+                raise ValueError(
+                    f"hedge_threshold must be > 0, got {self.hedge_threshold}"
+                )
 
 
 class ServeScenario(NamedTuple):
@@ -274,7 +299,8 @@ def serve_policy(fcfg: FleetConfig, scenario: ServeScenario):
     if fcfg.dispatch == "kernel":
         base = make_kernel_policy(scenario.inputs.r, p_it=scenario.inputs.p_it)
         return stage_oblivious(base, pin_map=True)
-    return make_staged_policy(scenario.dag, scenario.wan, pin_map=True)
+    return make_staged_policy(scenario.dag, scenario.wan, pin_map=True,
+                              hedge=fcfg.hedge_threshold)
 
 
 class FleetEngine:
@@ -293,6 +319,8 @@ class FleetEngine:
         layout: Array | None = None,   # (K, N) placement layout
         alive: np.ndarray | None = None,  # (T, N) pod-alive mask
         telemetry: TelemetryConfig | None = None,
+        health: np.ndarray | None = None,  # (T, N) pod health in [0, 1]
+        link_health: np.ndarray | None = None,  # (T, N, N) WAN link factor
     ):
         self.fcfg = fcfg
         # The distribution layer (ISSUE 8): a TelemetryConfig with a
@@ -315,6 +343,38 @@ class FleetEngine:
         self.scenario = build_serve_scenario(
             fcfg, classes, omega, pue, r, up=up, down=down, layout=layout
         )
+        self.health = None
+        if health is not None:
+            health = np.asarray(health, np.float32)
+            if health.shape != (fcfg.horizon_slots, fcfg.n_pods):
+                raise ValueError(
+                    f"health must be (T={fcfg.horizon_slots}, "
+                    f"N={fcfg.n_pods}), got {health.shape}"
+                )
+            self.health = health
+            # Hoisted exactly like the scan engines: stragglers serve
+            # slower everywhere downstream (dispatch scoring, the hedge
+            # trigger, the drain), the per-slot step never sees the
+            # factor. All-ones health is the * 1.0 identity — the
+            # scenario stays bitwise, and so does every replay pin.
+            inputs = self.scenario.inputs
+            self.scenario = self.scenario._replace(
+                inputs=inputs._replace(
+                    mu=inputs.mu * jnp.asarray(health)[:, :, None]
+                )
+            )
+        self.link_health = None
+        if link_health is not None:
+            link_health = np.asarray(link_health, np.float32)
+            if link_health.shape != (
+                fcfg.horizon_slots, fcfg.n_pods, fcfg.n_pods
+            ):
+                raise ValueError(
+                    f"link_health must be (T={fcfg.horizon_slots}, "
+                    f"N={fcfg.n_pods}, N={fcfg.n_pods}), "
+                    f"got {link_health.shape}"
+                )
+            self.link_health = link_health
         self.p_it = self.scenario.inputs.p_it
         self.policy = serve_policy(fcfg, self.scenario)
         if getattr(self.policy, "consumes_key", True):
@@ -341,14 +401,25 @@ class FleetEngine:
         pol = self.policy
         dag = self.scenario.dag
         returns_flow = getattr(pol, "returns_flow", False)
+        returns_hedge = getattr(pol, "returns_hedge", False)
         key0 = jax.random.key(0)   # signature filler: key-free policies only
         hist_on = self._hist_on
         spec = self.telemetry.hist if hist_on else None
 
         def core(q, arrivals, mu, e_cost, mu_stages, dd_t, wpue_t, v):
             ret = pol(key0, q, arrivals, mu, e_cost, (dd_t, wpue_t), v)
-            return staged_slot_update(dag, q, ret, arrivals, mu_stages,
-                                      returns_flow)
+            q_next, f, acc, in_stack = staged_slot_update(
+                dag, q, ret, arrivals, mu_stages, returns_flow, returns_hedge
+            )
+            if returns_hedge:
+                # Queues drained at the first-completion boosted rates;
+                # ``done`` must drain the same flow, so hand the boosted
+                # rates (and the clone matrix, for the honest post-run
+                # bill) back to the step. Hedge off keeps ``mu_stages``
+                # itself — the non-hedging step's jaxpr is untouched.
+                g = ret[2]
+                return q_next, f, acc, in_stack, g, hedged_mu(f, g, mu_stages)
+            return q_next, f, acc, in_stack, None, mu_stages
 
         def clock(age, hist, admitted, done):
             # Sojourn inflow is ADMITTED mass only — recovery-burst
@@ -361,23 +432,28 @@ class FleetEngine:
             if not hist_on:
                 @jax.jit
                 def step(q, arrivals, mu, e_cost, mu_stages, dd_t, wpue_t, v):
-                    q_next, f, acc, in_stack = core(
+                    q_next, f, acc, in_stack, g, mu_eff = core(
                         q, arrivals, mu, e_cost, mu_stages, dd_t, wpue_t, v
                     )
-                    done = jnp.minimum(acc, mu_stages)
-                    return q_next, f, acc, in_stack, done, jnp.float32(0.0)
+                    done = jnp.minimum(acc, mu_eff)
+                    out = (q_next, f, acc, in_stack, done, jnp.float32(0.0))
+                    if returns_hedge:
+                        out = out + (g,)
+                    return out
                 return step
 
             @jax.jit
             def step(q, arrivals, mu, e_cost, mu_stages, dd_t, wpue_t, v,
                      age, hist):
-                q_next, f, acc, in_stack = core(
+                q_next, f, acc, in_stack, g, mu_eff = core(
                     q, arrivals, mu, e_cost, mu_stages, dd_t, wpue_t, v
                 )
-                done = jnp.minimum(acc, mu_stages)
+                done = jnp.minimum(acc, mu_eff)
                 age, hist = clock(age, hist, arrivals, done)
-                return (q_next, f, acc, in_stack, done, jnp.float32(0.0),
-                        age, hist)
+                out = (q_next, f, acc, in_stack, done, jnp.float32(0.0))
+                if returns_hedge:
+                    out = out + (g,)
+                return out + (age, hist)
             return step
 
         @jax.jit
@@ -411,11 +487,13 @@ class FleetEngine:
             unif = jnp.broadcast_to((alive_t / n_alive)[None, :], dd_t.shape)
             dd_m = survivor_renorm(dd_t * alive_t[None, :], unif, axis=1)
             dd_t = jnp.where(any_dead, dd_m, dd_t)
-            q_next, f, acc, in_stack = core(
+            q_next, f, acc, in_stack, g, mu_eff = core(
                 q, arrivals, mu, e_cost, mu_stages, dd_t, wpue_t, v
             )
-            done = jnp.minimum(acc, mu_stages)
+            done = jnp.minimum(acc, mu_eff)
             out = (q_next, f, acc, in_stack, done, jnp.sum(burst))
+            if returns_hedge:
+                out = out + (g,)
             if hist_on:
                 age, hist = clock(tel[0], tel[1], admitted0, done)
                 out = out + (age, hist)
@@ -532,11 +610,13 @@ class FleetEngine:
 
         q = jnp.zeros((n, k, s_max), jnp.float32)
         hist_on = self._hist_on
+        hedging = getattr(self.policy, "returns_hedge", False)
         if hist_on:
             # Per-class FIFO sojourn clock: the age ring is bounded by the
             # horizon (no request can wait longer than the run).
             age, soj_hist = sojourn_init(self.telemetry.hist, k, t_slots)
         f_slots, in_slots, done_slots = [], [], []
+        g_slots, acc_slots = [], []
         history: list[dict] = []
         events: list[dict] = []
         backlogs = []
@@ -555,10 +635,13 @@ class FleetEngine:
                 )
             if hist_on:
                 args = args + (age, soj_hist)
-                (q, f, acc, in_stack, done, drained,
-                 age, soj_hist) = self._step(*args)
-            else:
-                q, f, acc, in_stack, done, drained = self._step(*args)
+            res = self._step(*args)
+            if hist_on:
+                res, (age, soj_hist) = res[:-2], res[-2:]
+            q, f, acc, in_stack, done, drained = res[:6]
+            if hedging:
+                g_slots.append(res[6])
+                acc_slots.append(acc)
             f_slots.append(f)
             in_slots.append(in_stack)
             done_slots.append(done)
@@ -642,6 +725,44 @@ class FleetEngine:
             vol_all.reshape(t_slots, s_max * k),
             scn.wan, inputs.omega, inputs.pue,
         )
+        if self.link_health is not None:
+            # Degraded-link premium on the KV-handoff traffic — the same
+            # additive surcharge simulate_staged applies (exact zero on
+            # an all-nominal trace, so the replay pin survives).
+            sur_c, sur_e = degraded_surcharge(
+                src_all.reshape(t_slots, s_max * k, n),
+                dst_all.reshape(t_slots, s_max * k, n),
+                vol_all.reshape(t_slots, s_max * k),
+                scn.wan, inputs.omega, inputs.pue,
+                jnp.asarray(self.link_health),
+            )
+            wan_c = wan_c + sur_c
+            wan_e = wan_e + sur_e
+        if hedging:
+            # The honest speculation bill, identical to simulate_staged's
+            # post-scan block: boost-attributable completions billed at
+            # the clone pod's stage energy plus the expected KV pull.
+            g_all = jnp.stack(g_slots)                         # (T,N,K,S)
+            acc_all = jnp.stack(acc_slots)                     # (T,N,K,S)
+            mu_used = mu_stage_all
+            if faulty:
+                mu_used = mu_used * jnp.asarray(
+                    self.alive
+                )[:, :, None, None]
+            boost_all = jnp.sum(g_all * mu_used, axis=1)       # (T,K,S)
+            mu_eff_all = mu_used + f_trace * boost_all[:, None]
+            hedge_c, hedge_gb, hedged_jobs = _hedge_bill(
+                dag, scn.wan, g_all, acc_all, mu_used, mu_eff_all,
+                ec_stage_all, src_all, wpue_all,
+            )
+        else:
+            hedge_c = hedge_gb = hedged_jobs = jnp.zeros(
+                (t_slots,), jnp.float32
+            )
+        hedge_costs = np.asarray(hedge_c)
+        hedged_np = np.asarray(hedged_jobs)
+        for t, h in enumerate(history):
+            h["hedged_jobs"] = float(hedged_np[t])
         costs = np.asarray(cost)
         wan_costs = np.asarray(wan_c)
         slo_viol_frac = np.mean(
@@ -675,7 +796,12 @@ class FleetEngine:
             "wan_cost": wan_costs,
             "wan_gb": np.asarray(wan_gb),
             "wan_energy": np.asarray(wan_e),
-            "total_billed_cost": float(costs.sum() + wan_costs.sum()),
+            "hedge_cost": hedge_costs,
+            "hedge_gb": np.asarray(hedge_gb),
+            "hedged_jobs": hedged_np,
+            "total_billed_cost": float(
+                costs.sum() + wan_costs.sum() + hedge_costs.sum()
+            ),
             "raw_arrivals": np.asarray(scn.raw_arrivals),
             "admitted": admitted_np,
             "rejected": rejected_np,

@@ -54,13 +54,17 @@ from repro.telemetry.spans import (
     controller_spans,
     request_spans,
     spans_from_records,
+    straggler_spans,
     to_chrome_trace,
     write_chrome_trace,
 )
 from repro.telemetry.ring import (
     EV_EPOCH,
+    EV_HEDGE,
     EV_INGEST_REDIRECT,
+    EV_LINK_DOWN,
     EV_RECOVERY,
+    EV_REPAIR,
     EV_SWITCH,
     EventRing,
     TelemetryFrame,
@@ -73,6 +77,8 @@ from repro.telemetry.collect import (
     collect_records,
     engine_kind,
     fleet_records,
+    hedge_events,
+    link_down_events,
     switch_events,
     time_to_slo,
 )
@@ -90,8 +96,9 @@ __all__ = [
     "EventRing", "TelemetryFrame", "empty_frame",
     "ring_init", "ring_push", "ring_events",
     "EV_RECOVERY", "EV_EPOCH", "EV_SWITCH", "EV_INGEST_REDIRECT",
+    "EV_REPAIR", "EV_HEDGE", "EV_LINK_DOWN",
     "collect_records", "engine_kind", "fleet_records", "switch_events",
-    "time_to_slo",
+    "hedge_events", "link_down_events", "time_to_slo",
     "write_jsonl", "read_jsonl", "render_timeline", "sparkline",
     "cross_check",
     "HistogramSpec", "hist_init", "hist_add", "hist_series",
@@ -99,5 +106,5 @@ __all__ = [
     "fifo_sojourn_replay", "weighted_percentile",
     "SloSpec", "burn_events", "evaluate_slo",
     "request_spans", "controller_spans", "spans_from_records",
-    "to_chrome_trace", "write_chrome_trace",
+    "straggler_spans", "to_chrome_trace", "write_chrome_trace",
 ]

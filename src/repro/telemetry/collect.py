@@ -34,6 +34,7 @@ from repro.telemetry.ring import (
     EV_EPOCH,
     EV_INGEST_REDIRECT,
     EV_RECOVERY,
+    EV_REPAIR,
     TelemetryFrame,
     ring_events,
 )
@@ -46,8 +47,10 @@ FIELDS_BY_CODE = {
     EV_EPOCH: ("wan_gb", "wan_cost", "sync_cost", "churn", "budget_use",
                "epoch"),
     EV_INGEST_REDIRECT: ("redirected_mass", "n_dead"),
+    EV_REPAIR: ("n_revived", "site"),
 }
-_INT_FIELDS = {"n_died", "site", "epoch", "n_dead", "k", "src", "dst", "stage"}
+_INT_FIELDS = {"n_died", "site", "epoch", "n_dead", "k", "src", "dst",
+               "stage", "n_revived"}
 
 
 def _np(x):
@@ -90,6 +93,55 @@ def switch_events(f_trace: np.ndarray) -> list[dict]:
             if staged:
                 ev["stage"] = int(s)
             events.append(ev)
+        prev = cur
+    return events
+
+
+def hedge_events(hedged_jobs, hedge_cost=None) -> list[dict]:
+    """Speculation events derived from the per-slot hedge trace.
+
+    The staged/serve engines bill hedging post-scan, so there is no
+    in-ring record; one ``hedge`` event per slot where speculative clones
+    actually completed work, carrying the re-executed job-units (and the
+    $ bill when the cost series is given).
+    """
+    hj = _np(hedged_jobs)
+    hc = _np(hedge_cost) if hedge_cost is not None else None
+    events = []
+    for t in np.nonzero(hj > 0.0)[0]:
+        ev = {"type": "event", "t": int(t), "code": "hedge",
+              "hedged_jobs": float(hj[t])}
+        if hc is not None:
+            ev["hedge_cost"] = float(hc[t])
+        events.append(ev)
+    return events
+
+
+def link_down_events(link_health) -> list[dict]:
+    """Severed-link edges derived from a (T, N, N) link-health trace.
+
+    One ``link_down`` event per directed off-diagonal link transition:
+    ``edge="down"`` the slot the factor first hits zero, ``edge="up"``
+    the slot it recovers. Degraded-but-alive links emit nothing — they
+    are priced, not partitioned.
+    """
+    lh = _np(link_health)
+    severed = lh <= 0.0
+    n = lh.shape[1]
+    prev = np.zeros((n, n), bool)
+    events = []
+    for t in range(lh.shape[0]):
+        cur = severed[t]
+        for i, j in np.argwhere(cur & ~prev):
+            if i != j:
+                events.append({"type": "event", "t": int(t),
+                               "code": "link_down", "src": int(i),
+                               "dst": int(j), "edge": "down"})
+        for i, j in np.argwhere(prev & ~cur):
+            if i != j:
+                events.append({"type": "event", "t": int(t),
+                               "code": "link_down", "src": int(i),
+                               "dst": int(j), "edge": "up"})
         prev = cur
     return events
 
@@ -138,11 +190,20 @@ def collect_records(
     meta: dict | None = None,
     include_switches: bool = True,
     include_metrics: bool = True,
+    link_health=None,
 ) -> list[dict]:
     """Build the full record stream for one run.
 
     ``outs`` must be a single run (no Monte-Carlo axis) — flight recording
     is per-run by construction; pick one lane of a vmapped sweep first.
+
+    Recovery events pair with the next ``repair`` event (the revival edge
+    the controller records): ``time_to_slo`` measures from the TRUE
+    revival slot — a dead site cannot re-enter the SLO band before it is
+    back — with the repair slot surfaced as ``repair_t``; an unpaired
+    recovery falls back to its own death slot. Staged/serve runs with a
+    nonzero hedge trace add derived ``hedge`` events; passing the run's
+    ``link_health`` trace adds derived ``link_down`` edges.
     """
     cfg = cfg or TelemetryConfig()
     kind = engine_kind(outs)
@@ -165,12 +226,21 @@ def collect_records(
     dropped = 0
     if frame is not None:
         events, dropped = _decoded_ring(frame)
+        repair_ts = sorted(e["t"] for e in events if e["code"] == "repair")
         for ev in events:
             if ev["code"] == "recovery":
-                tts, thr = time_to_slo(backlog, ev["t"], cfg)
+                t0 = next((rt for rt in repair_ts if rt >= ev["t"]), ev["t"])
+                tts, thr = time_to_slo(backlog, t0, cfg)
                 ev["time_to_slo"] = tts
                 ev["slo_backlog"] = thr
+                if t0 != ev["t"]:
+                    ev["repair_t"] = t0
     records[0]["events_dropped"] = dropped
+    hedged = getattr(outs, "hedged_jobs", None)
+    if hedged is not None and float(_np(hedged).sum()) > 0.0:
+        events.extend(hedge_events(hedged, getattr(outs, "hedge_cost", None)))
+    if link_health is not None:
+        events.extend(link_down_events(link_health))
     if include_switches:
         events.extend(switch_events(outs.f_trace))
     events.sort(key=lambda e: (e["t"], e["code"]))
@@ -276,6 +346,9 @@ def fleet_records(out: dict, *, meta: dict | None = None,
         )
         ev["time_to_slo"] = tts
         ev["slo_backlog"] = thr
+    if "hedged_jobs" in out:
+        events.extend(hedge_events(out["hedged_jobs"],
+                                   out.get("hedge_cost")))
     events.extend(switch_events(out["dispatch"]))
     events.sort(key=lambda e: (e["t"], e["code"]))
     records.extend(events)
@@ -313,7 +386,7 @@ def fleet_records(out: dict, *, meta: dict | None = None,
                     counts, spec, slo, names=class_names),
             })
 
-    records.append({
+    summary = {
         "type": "summary", "kind": "serve",
         "mean_cost": float(out["mean_cost"]),
         "final_backlog": float(out["final_backlog"]),
@@ -323,5 +396,9 @@ def fleet_records(out: dict, *, meta: dict | None = None,
         "served": float(_np(out["served"]).sum()),
         "exec_jobs": int(out["exec_jobs"]),
         "n_recoveries": int(len(out.get("events", ()))),
-    })
+    }
+    if "hedged_jobs" in out:
+        summary["hedged_jobs"] = float(_np(out["hedged_jobs"]).sum())
+        summary["hedge_cost"] = float(_np(out["hedge_cost"]).sum())
+    records.append(summary)
     return records

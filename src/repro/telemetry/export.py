@@ -195,10 +195,13 @@ def cross_check(records: list[dict], rtol: float = 1e-5) -> dict:
     elif kind == "staged":
         wan = float(np.sum([m.get("wan_cost", 0.0) for m in metrics])) / t_slots
         wan_gb = float(np.sum([m.get("wan_gb", 0.0) for m in metrics]))
+        hedge = sum(e.get("hedge_cost", 0.0) for e in events
+                    if e.get("code") == "hedge") / t_slots
         check("compute_cost", cost, "time_avg_compute_cost")
         check("wan_cost", wan, "time_avg_wan_cost")
         check("wan_gb", wan_gb, "total_wan_gb")
-        check("total_cost", cost + wan, "time_avg_total_cost")
+        check("hedge_cost", hedge, "time_avg_hedge_cost")
+        check("total_cost", cost + wan + hedge, "time_avg_total_cost")
     else:
         check("cost", cost, "time_avg_cost")
     return out

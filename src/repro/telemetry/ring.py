@@ -39,12 +39,25 @@ EV_SWITCH = 3
 #: Ingest aimed at dead sites redirected to survivors (placed engine).
 #: fields: [redirected_mass, n_dead, 0, 0, 0, 0]
 EV_INGEST_REDIRECT = 4
+#: Site revival edge (placed engine) — the companion of EV_RECOVERY; the
+#: SLO clock measures recovery from this slot, not the death slot.
+#: fields: [n_revived, site, 0, 0, 0, 0]
+EV_REPAIR = 5
+#: Speculative re-execution fired (staged/serve engines; derived
+#: post-scan from the hedge trace). fields: [hedged_jobs, hedge_cost]
+EV_HEDGE = 6
+#: A WAN link severed (derived from the link-health trace).
+#: fields: [src, dst, 0/1 down-edge vs up-edge]
+EV_LINK_DOWN = 7
 
 CODE_NAMES = {
     EV_RECOVERY: "recovery",
     EV_EPOCH: "epoch",
     EV_SWITCH: "switch",
     EV_INGEST_REDIRECT: "ingest_redirect",
+    EV_REPAIR: "repair",
+    EV_HEDGE: "hedge",
+    EV_LINK_DOWN: "link_down",
 }
 
 

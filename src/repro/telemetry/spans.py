@@ -18,6 +18,11 @@ Two builders:
 * :func:`controller_spans` — epoch / recovery / switch spans from a
   ``collect_records`` / ``fleet_records`` stream (the list of dicts, or
   whatever :func:`repro.telemetry.export.read_jsonl` returned).
+* :func:`straggler_spans` — degraded-health windows from a (T, N) health
+  trace (:mod:`repro.traces.faults`): per site, each maximal sub-nominal
+  window becomes a ``straggler`` (interior factor) or ``dead`` (factor
+  hits zero) span with a ``repaired`` instant at its close — overlay
+  these on a faulted run's timeline to see WHY the tail moved.
 
 Both return plain span dicts (``name``/``cat``/``t0``/``t1``/``track``/
 ``args``; ``t1 is None`` marks an instant), which
@@ -196,6 +201,60 @@ def controller_spans(records: list[dict]) -> list[dict]:
                 burn_short=r.get("burn_short"), burn_long=r.get("burn_long"),
                 threshold=r.get("threshold"),
             ))
+    return spans
+
+
+def straggler_spans(health, site_names=None, link_health=None) -> list[dict]:
+    """Degraded-health windows from a ``(T, N)`` health trace.
+
+    One track per site. Each maximal window where a site's health factor
+    sits below 1.0 becomes an interval span — cat ``dead`` when the
+    factor bottoms out at zero inside the window, ``straggler``
+    otherwise — carrying the window's min/mean factor, with a
+    ``repaired`` instant at its close (when it closes before the
+    horizon). Pass ``link_health`` (``(T, N, N)``) to additionally emit
+    ``link down``/``link up`` instants on a ``links`` track for every
+    severed-edge transition. Overlay on a faulted run's request timeline
+    to see why the tail moved.
+    """
+    h = np.asarray(health, np.float64)
+    t_slots, n = h.shape
+    names = list(site_names or [f"site{i}" for i in range(n)])
+    spans: list[dict] = []
+    for i in range(n):
+        t = 0
+        while t < t_slots:
+            if h[t, i] >= 1.0 - _EPS:
+                t += 1
+                continue
+            t0 = t
+            while t < t_slots and h[t, i] < 1.0 - _EPS:
+                t += 1
+            win = h[t0:t, i]
+            lo = float(win.min())
+            cat = "dead" if lo <= _EPS else "straggler"
+            label = (f"{names[i]} dead" if cat == "dead"
+                     else f"{names[i]} x{lo:.2f}")
+            spans.append(span(
+                label, cat, t0, t, track=names[i],
+                factor_min=round(lo, 4),
+                factor_mean=round(float(win.mean()), 4),
+            ))
+            if t < t_slots:
+                spans.append(span("repaired", "repair", t, track=names[i]))
+    if link_health is not None:
+        lh = np.asarray(link_health, np.float64)
+        down = lh <= _EPS
+        for t in range(t_slots):
+            prev = down[t - 1] if t else np.zeros_like(down[0])
+            for src, dst in zip(*np.nonzero(down[t] != prev)):
+                if src == dst:
+                    continue
+                edge = "down" if down[t, src, dst] else "up"
+                spans.append(span(
+                    f"link {names[src]}→{names[dst]} {edge}", "link", t,
+                    track="links", src=int(src), dst=int(dst), edge=edge,
+                ))
     return spans
 
 

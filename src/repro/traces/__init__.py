@@ -23,12 +23,23 @@ Training-data pipeline (used by repro.train):
 from repro.traces.arrivals import poisson_arrivals, FACEBOOK_MONTHLY_JOBS
 from repro.traces.price import price_trace, SiteSpec, FACEBOOK_SITES
 from repro.traces.pue import pue_trace
-from repro.traces.bandwidth import bandwidth_draw
+from repro.traces.bandwidth import (
+    bandwidth_draw,
+    link_fault_trace,
+    scheduled_link_fault_trace,
+)
 from repro.traces.datasets import dataset_distribution, service_rate_trace
 from repro.traces.drift import dataset_growth_trace, ingest_drift_trace
 from repro.traces.faults import (
+    compose_health,
     failure_edges,
+    health_to_alive,
+    health_trace,
+    region_assignment,
+    regional_health_trace,
+    repair_edges,
     scheduled_failure_trace,
+    scheduled_health_trace,
     site_failure_trace,
 )
 from repro.traces.stages import (
@@ -46,12 +57,21 @@ __all__ = [
     "FACEBOOK_SITES",
     "pue_trace",
     "bandwidth_draw",
+    "link_fault_trace",
+    "scheduled_link_fault_trace",
     "dataset_distribution",
     "service_rate_trace",
     "dataset_growth_trace",
     "ingest_drift_trace",
+    "compose_health",
     "failure_edges",
+    "health_to_alive",
+    "health_trace",
+    "region_assignment",
+    "regional_health_trace",
+    "repair_edges",
     "scheduled_failure_trace",
+    "scheduled_health_trace",
     "site_failure_trace",
     "selectivity_trace",
     "stage_compute_profile",

@@ -18,6 +18,28 @@ generators produce the per-slot **alive mask** consumed by
 Masks are (T, N) float32 in {0, 1}; 1 = alive. An all-ones mask is the
 no-fault scenario and the controller's fault path is bit-exact with its
 no-fault path on it.
+
+Beyond binary death, the *degraded-mode* generators produce a **health
+factor** in ``[0, 1]`` — 0 = dead, 1 = nominal, interior = straggler
+(the dominant hazard of practical geo-analytics per Zhang et al.,
+1802.00245: slow-but-alive sites):
+
+* :func:`health_trace` — seeded Markov straggler onset/recovery per
+  site: healthy sites degrade with ``straggle_prob`` to a drawn severity
+  factor, stragglers recover with ``recover_prob``.
+* :func:`region_assignment` / :func:`regional_health_trace` — contiguous
+  region blocks and shared-fate regional outages: a whole region
+  degrades (or dies) together, modeling correlated outages.
+* :func:`compose_health` — elementwise-min composition of independent
+  hazard traces (site stragglers × regional outages).
+* :func:`scheduled_health_trace` — deterministic (site, start, end,
+  factor) degradation windows for regression tests.
+* :func:`health_to_alive` — project a health trace back to the binary
+  alive mask the PR-2 fault path consumes (``health > 0``).
+
+Engines consume health by scaling per-slot service rates: an all-ones
+health trace is bitwise identical to the no-fault path (``mu * 1.0`` is
+an exact identity).
 """
 
 from __future__ import annotations
@@ -90,6 +112,15 @@ def scheduled_failure_trace(
     for site, down_at, up_at in events:
         if not 0 <= site < n_sites:
             raise ValueError(f"site {site} out of range for N={n_sites}")
+        if down_at < 0:
+            # A negative down_at would silently wrap via Python slice
+            # semantics and kill the *tail* of the trace instead.
+            raise ValueError(f"down_at={down_at} must be >= 0")
+        if up_at is not None and up_at <= down_at:
+            # An empty/inverted window silently no-ops; reject it loudly.
+            raise ValueError(
+                f"up_at={up_at} must be > down_at={down_at} (or None)"
+            )
         end = t_slots if up_at is None else min(up_at, t_slots)
         mask[down_at:end, site] = 0.0
     return jnp.asarray(mask)
@@ -105,3 +136,178 @@ def failure_edges(alive: Array) -> Array:
     alive = jnp.asarray(alive, jnp.float32)
     prev = jnp.concatenate([jnp.ones_like(alive[:1]), alive[:-1]], axis=0)
     return prev * (1.0 - alive)
+
+
+def repair_edges(alive: Array) -> Array:
+    """(T, N) mask of repair edges: 1 where a site revives this slot.
+
+    The companion of :func:`failure_edges`. Slot 0 compares against an
+    all-alive fleet, so a trace can never open with a revival — a repair
+    edge always pairs with an earlier death edge, which is what lets the
+    flight recorder show recovery timelines as down *and* up and lets
+    time-to-SLO measure from the true revival slot.
+    """
+    alive = jnp.asarray(alive, jnp.float32)
+    prev = jnp.concatenate([jnp.ones_like(alive[:1]), alive[:-1]], axis=0)
+    return (1.0 - prev) * alive
+
+
+# ---------------------------------------------------------------------------
+# Degraded-mode health: stragglers, regions, shared fate.
+# ---------------------------------------------------------------------------
+
+
+def health_trace(
+    key: Array,
+    t_slots: int,
+    n_sites: int,
+    straggle_prob: float = 0.02,
+    recover_prob: float = 0.25,
+    severity: tuple[float, float] = (0.2, 0.7),
+    death_prob: float = 0.0,
+) -> Array:
+    """(T, N) seeded health factor: Markov straggler onset/recovery.
+
+    Each healthy site starts straggling with ``straggle_prob`` per slot,
+    drawing a severity factor uniform in ``severity`` (the fraction of
+    nominal service rate it retains); a straggling site recovers with
+    ``recover_prob``. With ``death_prob > 0`` an onset event is instead a
+    full death (factor 0) with that conditional probability — dead sites
+    rejoin the same recovery Markov chain.
+
+    Deterministic given ``key``; an all-healthy draw is exactly 1.0
+    everywhere, so downstream ``mu * health`` stays bit-exact with the
+    nominal path.
+    """
+    lo, hi = severity
+    if not 0.0 <= lo <= hi <= 1.0:
+        raise ValueError(f"severity bounds {severity} must satisfy "
+                         "0 <= lo <= hi <= 1")
+    keys = jax.random.split(key, t_slots)
+
+    def slot(factor, kk):
+        # factor[i] == 1.0 <=> site i is healthy.
+        k_on, k_sev, k_dead, k_off = jax.random.split(kk, 4)
+        healthy = factor >= 1.0
+        onsets = healthy & (jax.random.uniform(k_on, (n_sites,))
+                            < straggle_prob)
+        sev = jax.random.uniform(k_sev, (n_sites,), minval=lo, maxval=hi)
+        dies = onsets & (jax.random.uniform(k_dead, (n_sites,)) < death_prob)
+        sev = jnp.where(dies, 0.0, sev)
+        recovers = (~healthy) & (jax.random.uniform(k_off, (n_sites,))
+                                 < recover_prob)
+        nxt = jnp.where(onsets, sev, jnp.where(recovers, 1.0, factor))
+        return nxt, nxt.astype(jnp.float32)
+
+    _, health = jax.lax.scan(slot, jnp.ones((n_sites,)), keys)
+    return health                                                 # (T, N)
+
+
+def region_assignment(n_sites: int, n_regions: int) -> Array:
+    """(N,) int32 region ids: contiguous, balanced blocks of sites.
+
+    Site ``i`` lands in region ``i * n_regions // n_sites`` — regions
+    are contiguous index ranges, matching how fleet scenarios cycle site
+    climates, so "same-region survivors" is a meaningful shared-fate
+    domain for the evacuation planner to avoid.
+    """
+    if not 1 <= n_regions <= n_sites:
+        raise ValueError(
+            f"n_regions={n_regions} out of range for N={n_sites}")
+    return (jnp.arange(n_sites, dtype=jnp.int32) * n_regions) // n_sites
+
+
+def regional_health_trace(
+    key: Array,
+    t_slots: int,
+    regions: Array,
+    outage_prob: float = 0.01,
+    repair_slots: int = 6,
+    outage_factor: float = 0.0,
+    min_regions_up: int = 1,
+) -> Array:
+    """(T, N) shared-fate health: whole regions degrade or die together.
+
+    A healthy region suffers an outage with ``outage_prob`` per slot;
+    every site in it drops to ``outage_factor`` (0 = regional blackout,
+    interior = brownout) for ``repair_slots`` slots. Outages that would
+    leave fewer than ``min_regions_up`` healthy regions are suppressed,
+    mirroring ``min_alive`` in :func:`site_failure_trace`.
+
+    Compose with per-site stragglers via :func:`compose_health`.
+    """
+    regions = jnp.asarray(regions, jnp.int32)
+    n_regions = int(jnp.max(regions)) + 1
+    if not 1 <= min_regions_up <= n_regions:
+        raise ValueError(f"min_regions_up={min_regions_up} out of range "
+                         f"for {n_regions} regions")
+    repair = max(int(repair_slots), 1)
+    keys = jax.random.split(key, t_slots)
+
+    def slot(down_left, kk):
+        healthy = (down_left == 0)
+        coins = jax.random.uniform(kk, (n_regions,))
+        fails = healthy & (coins < outage_prob)
+        up_after = jnp.sum(healthy) - jnp.sum(fails)
+        fails = jnp.where(up_after >= min_regions_up, fails, False)
+        new_down = jnp.where(fails, repair, jnp.maximum(down_left - 1, 0))
+        region_factor = jnp.where(new_down == 0, 1.0, outage_factor)
+        return new_down, region_factor[regions].astype(jnp.float32)
+
+    _, health = jax.lax.scan(slot, jnp.zeros((n_regions,), jnp.int32), keys)
+    return health                                                 # (T, N)
+
+
+def compose_health(*traces: Array) -> Array:
+    """Elementwise-min composition of independent (T, N) hazard traces.
+
+    The binding constraint wins: a straggling site inside a browned-out
+    region runs at the *worse* of the two factors, and any dead factor
+    (0) dominates.
+    """
+    if not traces:
+        raise ValueError("compose_health needs at least one trace")
+    health = jnp.asarray(traces[0], jnp.float32)
+    for t in traces[1:]:
+        health = jnp.minimum(health, jnp.asarray(t, jnp.float32))
+    return health
+
+
+def scheduled_health_trace(
+    t_slots: int,
+    n_sites: int,
+    events: list[tuple[int, int, int | None, float]],
+) -> Array:
+    """(T, N) health factor from explicit (site, start, end, factor) events.
+
+    ``end=None`` means the degradation never lifts. Windows are
+    half-open (``start <= t < end``); overlapping windows take the
+    minimum factor. Validation mirrors :func:`scheduled_failure_trace`:
+    negative ``start`` and empty windows raise instead of silently
+    wrapping / no-opping.
+    """
+    health = np.ones((t_slots, n_sites), np.float32)
+    for site, start, end, factor in events:
+        if not 0 <= site < n_sites:
+            raise ValueError(f"site {site} out of range for N={n_sites}")
+        if start < 0:
+            raise ValueError(f"start={start} must be >= 0")
+        if end is not None and end <= start:
+            raise ValueError(f"end={end} must be > start={start} (or None)")
+        if not 0.0 <= factor <= 1.0:
+            raise ValueError(f"factor={factor} must be in [0, 1]")
+        stop = t_slots if end is None else min(end, t_slots)
+        health[start:stop, site] = np.minimum(
+            health[start:stop, site], np.float32(factor))
+    return jnp.asarray(health)
+
+
+def health_to_alive(health: Array) -> Array:
+    """Project a (T, N) health factor to the binary alive mask.
+
+    Only factor 0 is death; every straggler is alive. This is the mask
+    the PR-2 fault machinery (death edges, recovery epochs, evacuation)
+    consumes — degraded-mode traces drive it through this projection so
+    recovery fires only on true deaths, never on slowdowns.
+    """
+    return (jnp.asarray(health, jnp.float32) > 0.0).astype(jnp.float32)

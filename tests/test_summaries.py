@@ -76,6 +76,9 @@ def _staged_outputs(rng, runs):
         wan_energy=_rand(rng, *_maybe_runs((T,), runs)),
         wan_gb=_rand(rng, *_maybe_runs((T,), runs)),
         completed=_rand(rng, *_maybe_runs((T, K), runs)),
+        hedge_cost=_rand(rng, *_maybe_runs((T,), runs)),
+        hedge_gb=_rand(rng, *_maybe_runs((T,), runs)),
+        hedged_jobs=_rand(rng, *_maybe_runs((T,), runs)),
     )
 
 
@@ -124,11 +127,14 @@ def test_summarize_staged_total_is_the_sum_of_parts(runs):
     outs = _staged_outputs(rng, runs)
     s = summarize_staged(outs)
     assert s["time_avg_total_cost"] == pytest.approx(
-        s["time_avg_compute_cost"] + s["time_avg_wan_cost"], rel=1e-6)
+        s["time_avg_compute_cost"] + s["time_avg_wan_cost"]
+        + s["time_avg_hedge_cost"], rel=1e-6)
     assert s["time_avg_compute_cost"] == pytest.approx(
         float(outs.cost.mean()), rel=1e-6)
     assert s["time_avg_wan_cost"] == pytest.approx(
         float(outs.wan_cost.mean()), rel=1e-6)
+    assert s["time_avg_hedge_cost"] == pytest.approx(
+        float(outs.hedge_cost.mean()), rel=1e-6)
 
 
 def test_summarize_staged_gb_conservation(runs):
