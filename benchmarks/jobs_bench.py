@@ -49,10 +49,11 @@ from repro.jobs import (
 )
 
 
-def _timed_sweep(build, dag, wan, pol, key, n_runs, v, trace_dir=None):
+def _timed_sweep(build, dag, wan, pol, key, n_runs, v, trace_dir=None,
+                 mesh=None):
     return timed_compile_sweep(
         lambda: simulate_staged_many(build, dag, wan, pol, key, n_runs,
-                                     scalar=v),
+                                     scalar=v, mesh=mesh),
         n_runs,
         trace_dir=trace_dir,
     )
@@ -88,7 +89,26 @@ def main(argv=None):
         "--trace-dir", default=None, metavar="DIR",
         help="profile the timed sweeps with jax.profiler.trace(DIR)",
     )
+    parser.add_argument(
+        "--devices", type=int, default=None, metavar="N",
+        help="shard the Monte-Carlo runs axis over an N-device host mesh "
+             "(repro.distributed.mesh; bitwise-identical results). Needs "
+             "the XLA host-device flag before jax init — this entry point "
+             "installs it when run standalone",
+    )
     args, _ = parser.parse_known_args(argv)
+
+    mesh = None
+    if args.devices:
+        # Before any jax device touch (ensure_host_devices raises if the
+        # backends already came up short — e.g. under benchmarks.run).
+        from repro.distributed.mesh import ensure_host_devices, runs_mesh
+
+        try:
+            ensure_host_devices(args.devices)
+        except RuntimeError:
+            pass
+        mesh = runs_mesh(min(args.devices, jax.device_count()))
 
     cfg = StagedPaperConfig()
     template, dag, wan, build = make_staged_builder(cfg)
@@ -102,12 +122,13 @@ def main(argv=None):
     ]:
         outs, us_per_run, compile_us = _timed_sweep(
             build, dag, wan, pol, key, n_runs, cfg.v,
-            trace_dir=args.trace_dir,
+            trace_dir=args.trace_dir, mesh=mesh,
         )
         s = summarize_staged(outs)
         results[name] = s
+        dev_tag = f"_dev{mesh.devices.size}" if mesh is not None else ""
         emit(
-            f"jobs_{name}_{n_runs}runs_per_run", us_per_run,
+            f"jobs_{name}_{n_runs}runs_per_run{dev_tag}", us_per_run,
             f"total_cost={s['time_avg_total_cost']:.1f};"
             f"compute_cost={s['time_avg_compute_cost']:.1f};"
             f"wan_cost={s['time_avg_wan_cost']:.1f};"

@@ -23,9 +23,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timed
-from repro.configs.fleet_256 import FleetConfig, make_fleet_builder
+from repro.configs.fleet_256 import (
+    FleetConfig,
+    make_fleet_builder,
+    make_score_operands,
+)
 from repro.core.gmsa import gmsa_policy, make_kernel_policy
 from repro.core.simulator import simulate
+from repro.kernels import pallas_backend, supports_compiled_pallas
 from repro.kernels.gmsa_score.ref import gmsa_score_ref
 from repro.kernels.gmsa_score.ops import gmsa_score
 from repro.kernels.ssd_scan.ops import ssd_scan
@@ -62,6 +67,116 @@ def bench_gmsa_dispatch():
             s_ref, b_ref = gmsa_score_ref(q, mu, a, vp, r, wpue)
             _, b_k = gmsa_score(q, mu, a, vp, r, wpue, interpret=True)
             assert np.array_equal(np.asarray(b_k), np.asarray(b_ref))
+
+
+def bench_gmsa_matrix():
+    """Compiled-vs-interpret-vs-hoisted-einsum dispatch matrix at N = 256.
+
+    One realistic fleet-scale slot (developed backlog, scenario prices and
+    ratios — :func:`repro.configs.fleet_256.make_score_operands`), three
+    arms of the SAME argmin decision, each row stamped with the backend:
+
+    * ``einsum``    — the simulator's hoisted path: the (K, N) per-job cost
+      table is precomputed once per epoch, so the per-slot work is just the
+      drift score + argmin (this is what ``simulate`` amortizes to);
+    * ``interpret`` — the Pallas kernel under the interpreter, from the raw
+      (K, N, N) ratio tensor (a correctness/viability row off-TPU, not a
+      speed number: the interpreter executes grid cells in Python);
+    * ``compiled``  — the same kernel lowered for real, only where the
+      backend supports it (:func:`repro.kernels.supports_compiled_pallas`
+      — TPU; recorded as skipped elsewhere so the per-backend trajectory
+      in BENCH_sim.json stays honest).
+
+    All arms must agree on the argmin before any timing is reported.
+    """
+    backend = pallas_backend()
+    cfg = FleetConfig(t_slots=FLEET_E2E_SLOTS)
+    q, mu, a, vp, r, wpue, e = make_score_operands(cfg)
+    n, k = q.shape[1], q.shape[0]
+
+    _, best_oracle = gmsa_score_ref(q, mu, a, vp, r, wpue)
+
+    # Arm 1: hoisted einsum — the table V·P^k·(r·wpue) is precomputed once
+    # per epoch (exactly what ``simulate`` closes over; ``energy_row``
+    # already folds P^k, scale by V), so the per-slot work is score+argmin.
+    e_hoist = jnp.asarray(cfg.v, jnp.float32) * e            # (K, N)
+    ein = jax.jit(
+        lambda qk, muk: jnp.argmin(a[:, None] * (qk - muk + e_hoist), axis=1)
+    )
+    best_ein, us_ein = timed(ein, q, mu)
+    assert np.array_equal(np.asarray(best_ein), np.asarray(best_oracle))
+    emit(f"gmsa_matrix_einsum_N{n}_K{k}", us_ein,
+         f"backend={backend};arm=einsum;agree=1.0")
+
+    # Arm 2: interpret-mode Pallas kernel (raw operands, fused pass).
+    _, us_int = timed(
+        lambda: gmsa_score(q, mu, a, vp, r, wpue, interpret=True),
+        warmup=1, iters=1,
+    )
+    _, best_int = gmsa_score(q, mu, a, vp, r, wpue, interpret=True)
+    assert np.array_equal(np.asarray(best_int), np.asarray(best_oracle))
+    emit(f"gmsa_matrix_interpret_N{n}_K{k}", us_int,
+         f"backend={backend};arm=interpret;agree=1.0")
+
+    # Arm 3: compiled Pallas kernel — TPU only; skipped rows keep the
+    # per-backend trajectory honest instead of mislabeling interpret time.
+    if supports_compiled_pallas():
+        _, us_c = timed(
+            lambda: gmsa_score(q, mu, a, vp, r, wpue, interpret=False)
+        )
+        _, best_c = gmsa_score(q, mu, a, vp, r, wpue, interpret=False)
+        assert np.array_equal(np.asarray(best_c), np.asarray(best_oracle))
+        emit(f"gmsa_matrix_compiled_N{n}_K{k}", us_c,
+             f"backend={backend};arm=compiled;agree=1.0")
+    else:
+        emit(f"gmsa_matrix_compiled_N{n}_K{k}", 0.0,
+             f"backend={backend};arm=compiled;status=skipped_no_pallas")
+
+
+def bench_ssd_matrix():
+    """The same three-arm matrix for the ssd chunked-scan kernel.
+
+    Interpret-mode Pallas is Python-per-grid-cell, so the matrix runs at a
+    reduced (b=1, s=256, h=2) slice of the mamba2-2.7b layer geometry —
+    large enough to cross chunk boundaries (s/chunk = 4 grid steps), small
+    enough that the interpret row completes in CI time. The jnp reference
+    (``ssd_chunked``) is the production CPU path and the baseline column.
+    """
+    backend = pallas_backend()
+    b, s, h, p, n, chunk = 1, 256, 2, 64, 128, 64
+    key = jax.random.key(2)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, s, n))
+    cm = jax.random.normal(ks[4], (b, s, n))
+
+    y_ref, _ = ssd_scan_ref(x, dt, a, bm, cm)
+
+    ref = jax.jit(lambda *args: ssd_chunked(*args, chunk))
+    _, us_ref = timed(ref, x, dt, a, bm, cm)
+    emit(f"ssd_matrix_jnp_S{s}_H{h}", us_ref,
+         f"backend={backend};arm=jnp_chunked")
+
+    (y_int, _), us_int = timed(
+        lambda: ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=True),
+        warmup=1, iters=1,
+    )
+    np.testing.assert_allclose(y_int, y_ref, rtol=3e-4, atol=3e-4)
+    emit(f"ssd_matrix_interpret_S{s}_H{h}", us_int,
+         f"backend={backend};arm=interpret")
+
+    if supports_compiled_pallas():
+        (y_c, _), us_c = timed(
+            lambda: ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=False)
+        )
+        np.testing.assert_allclose(y_c, y_ref, rtol=3e-4, atol=3e-4)
+        emit(f"ssd_matrix_compiled_S{s}_H{h}", us_c,
+             f"backend={backend};arm=compiled")
+    else:
+        emit(f"ssd_matrix_compiled_S{s}_H{h}", 0.0,
+             f"backend={backend};arm=compiled;status=skipped_no_pallas")
 
 
 def bench_fleet_e2e():
@@ -128,8 +243,10 @@ def bench_ssd():
 
 def main():
     bench_gmsa_dispatch()
+    bench_gmsa_matrix()
     bench_fleet_e2e()
     bench_ssd()
+    bench_ssd_matrix()
 
 
 if __name__ == "__main__":

@@ -50,6 +50,7 @@ def run_benches(failures: list) -> None:
         ("placement_bench", "benchmarks.placement_bench"),
         ("jobs_bench", "benchmarks.jobs_bench"),
         ("kernel_bench", "benchmarks.kernel_bench"),
+        ("shard_bench", "benchmarks.shard_bench"),
         ("serve_bench", "benchmarks.serve_bench"),
         ("roofline", "benchmarks.roofline"),
     ]:

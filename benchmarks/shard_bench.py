@@ -1,0 +1,121 @@
+"""Sharded Monte-Carlo throughput: the runs mesh vs the single-device vmap.
+
+The paper's methodology is 1000 Monte-Carlo runs per configuration; the
+tentpole question is whether sharding the ``runs`` axis over a host-device
+mesh (:mod:`repro.distributed.mesh`) buys wall-clock at that scale without
+costing determinism. Two arms, same entry point, same key stream:
+
+* ``dev1``  — ``simulate_many`` exactly as every figure script calls it
+  (one ``vmap`` over the (n_runs,) key axis);
+* ``devN``  — the same call with ``mesh=runs_mesh(N)``.
+
+The devN arm must be **bitwise identical** to dev1 (asserted every run —
+the determinism contract of ``sharded_runs``), and its per-run time is
+reported with the speedup in the derived payload so BENCH_sim.json carries
+the trajectory per (backend, device count).
+
+Honesty note: forcing 8 host devices on a box with fewer physical cores
+time-slices one core and proves nothing about throughput — the >= 3x
+speedup gate therefore only arms when the machine really has >= 8 CPUs
+(the 8-device CI job and real workstations). Elsewhere the numbers are
+still recorded, labeled with ``cpus=`` so the trajectory can't be misread.
+
+Run standalone (the flag must precede jax backend init, which this module
+defers until after ``ensure_host_devices``):
+
+    PYTHONPATH=src python -m benchmarks.shard_bench --devices 8 --runs 1000
+
+Under ``benchmarks.run`` jax is usually already initialized by earlier
+sections; the bench then degrades to however many devices exist.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+from benchmarks.common import N_RUNS, emit, timed_compile_sweep
+
+#: Paper-methodology run count for the throughput claim.
+SHARD_RUNS = 1000
+
+#: Short horizon: the throughput ratio is about the runs axis, not T.
+SHARD_SLOTS = 48
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--devices", type=int, default=8,
+        help="host devices to request for the mesh arm (default 8)",
+    )
+    parser.add_argument(
+        "--runs", type=int, default=min(SHARD_RUNS, N_RUNS),
+        help="Monte-Carlo runs per arm (default min(1000, REPRO_BENCH_RUNS))",
+    )
+    args, _ = parser.parse_known_args(argv)
+
+    # Must happen before anything touches a jax device: when this module
+    # is the process entry the flag lands in time; under benchmarks.run
+    # the backends are already up and we use whatever devices exist.
+    from repro.distributed.mesh import ensure_host_devices, runs_mesh
+
+    try:
+        ensure_host_devices(args.devices)
+    except RuntimeError:
+        pass
+
+    import jax
+
+    from repro.configs.facebook_4dc import PaperSimConfig, make_sim_builder
+    from repro.core.gmsa import gmsa_policy
+    from repro.core.simulator import simulate_many
+
+    n_dev = min(args.devices, jax.device_count())
+    n_runs = args.runs
+    cpus = os.cpu_count() or 1
+
+    cfg = PaperSimConfig(t_slots=SHARD_SLOTS)
+    _, build = make_sim_builder(cfg)
+    key = jax.random.key(0)
+
+    ref, us1, c1 = timed_compile_sweep(
+        lambda: simulate_many(build, gmsa_policy, key, n_runs), n_runs
+    )
+    emit(
+        f"shard_simulate_many_{n_runs}runs_dev1", us1,
+        f"devices=1;cpus={cpus};compile_us={c1:.0f}",
+    )
+
+    mesh = runs_mesh(n_dev)
+    outs, usn, cn = timed_compile_sweep(
+        lambda: simulate_many(build, gmsa_policy, key, n_runs, mesh=mesh),
+        n_runs,
+    )
+    bitwise = all(
+        bool(jax.numpy.all(x == y))
+        for x, y in zip(jax.tree_util.tree_leaves(ref),
+                        jax.tree_util.tree_leaves(outs))
+    )
+    speedup = us1 / max(usn, 1e-9)
+    emit(
+        f"shard_simulate_many_{n_runs}runs_dev{n_dev}", usn,
+        f"devices={n_dev};cpus={cpus};speedup_vs_dev1={speedup:.2f}x;"
+        f"bitwise={bitwise};compile_us={cn:.0f}",
+    )
+
+    assert bitwise, (
+        "sharded Monte-Carlo must be bitwise identical to the "
+        "single-device vmap (determinism contract of sharded_runs)"
+    )
+    if n_dev >= 8 and cpus >= 8:
+        assert speedup >= 3.0, (
+            f"8-device runs mesh on {cpus} CPUs must deliver >= 3x per-run "
+            f"throughput at n_runs={n_runs} (got {speedup:.2f}x)"
+        )
+
+
+if __name__ == "__main__":
+    main()
+    from benchmarks.common import write_bench_json
+    write_bench_json(label="shard_bench")

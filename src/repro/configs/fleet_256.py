@@ -160,6 +160,45 @@ def make_fleet_builder(
     return template, build_inputs
 
 
+def make_score_operands(cfg: FleetConfig, warm_slots: int = 48):
+    """One realistic fleet-scale slot of kernel operands.
+
+    Returns ``(q, mu, a, vp, r, wpue, e)`` — everything the three dispatch
+    arms of the ``benchmarks/kernel_bench.py`` timing matrix consume:
+
+    * ``q`` (K, N) is a *developed* backlog — the reference engine is run
+      for ``warm_slots`` so the argmin is scored against the queue state
+      GMSA actually produces, not an arbitrary random tensor;
+    * ``mu``/``a`` are slot-0 draws from the scenario's Poisson tables,
+      ``wpue`` the slot-0 prices, ``r`` the scenario's (K, N, N) Iridium
+      ratios, ``vp = V * P^k``;
+    * ``e`` (K, N) is the hoisted-einsum per-job cost row
+      (:func:`repro.core.simulator.energy_row`) the precomputed-table arm
+      dispatches from.
+
+    Kernel orientation throughout: (K, N), matching
+    :func:`repro.kernels.gmsa_score.ops.gmsa_score`.
+    """
+    from repro.core.gmsa import gmsa_policy
+    from repro.core.simulator import energy_row, simulate
+
+    template, _ = make_fleet_builder(cfg)
+    warm = template._replace(
+        arrivals=template.arrivals[:warm_slots],
+        mu=template.mu[:warm_slots],
+        omega=template.omega[:warm_slots],
+        pue=template.pue[:warm_slots],
+    )
+    outs = simulate(warm, gmsa_policy, jax.random.key(cfg.trace_seed), cfg.v)
+    q = outs.q_final.T                                   # (K, N)
+    mu = template.mu[0].T                                # (K, N)
+    a = template.arrivals[0]                             # (K,)
+    vp = cfg.v * template.p_it                           # (K,)
+    wpue = template.omega[0] * template.pue[0]           # (N,)
+    e, _ = energy_row(template.r, wpue, template.pue[0], template.p_it)
+    return q, mu, a, vp, template.r, wpue, e
+
+
 def make_serve_grid(cfg: FleetConfig, k_classes: int, slots: int):
     """The fleet scenario re-cut as a SERVING pod grid.
 

@@ -111,10 +111,11 @@ def gmsa_dispatch(
         p = jnp.ones_like(arrivals) if p_it is None else p_it
         vp = jnp.asarray(v, jnp.float32) * p                    # (K,) V·P^k
         if impl == "kernel":
+            from repro.kernels import default_interpret
             from repro.kernels.gmsa_score.ops import gmsa_score
 
             if interpret is None:
-                interpret = jax.default_backend() != "tpu"
+                interpret = default_interpret()
             _, best = gmsa_score(
                 q.T, mu.T, arrivals, vp, r, wpue, interpret=interpret
             )                                                   # best (K,)
@@ -182,38 +183,56 @@ def dispatch_fn(v: float):
 
 
 def make_kernel_policy(
-    r: Array,
+    r: Array | None = None,
     p_it: Array | None = None,
     impl: str = "kernel",
     interpret: bool | None = None,
 ):
     """GMSA policy driving dispatch through the fused Pallas kernel.
 
-    Binds the static (K, N, N) ratio tensor and routes every slot's
-    decision through ``gmsa_dispatch(..., impl=...)`` on the raw
-    ``(r, wpue)`` operands — the fleet-scale path where the kernel fuses
-    the cost matvec, the drift score and the argmin in one pass
-    (:mod:`repro.kernels.gmsa_score`). V rides in as the simulator's
+    Routes every slot's decision through ``gmsa_dispatch(..., impl=...)``
+    on the raw ``(r, wpue)`` operands — the fleet-scale path where the
+    kernel fuses the cost matvec, the drift score and the argmin in one
+    pass (:mod:`repro.kernels.gmsa_score`). V rides in as the simulator's
     traced ``scalar``, exactly like :func:`gmsa_policy`.
 
-    The policy declares ``wants_wpue = True``, so
-    :func:`repro.core.simulator.simulate` hands it
-    ``aux = (data_dist, omega_t * pue_t)`` per slot — this is what lets an
-    N = 256 ``configs.fleet_256`` run complete end-to-end through the
-    kernel (interpret mode on CPU/CI, compiled on TPU;
-    ``impl="ref"`` selects the pure-jnp oracle instead — the fallback
-    when Pallas is unavailable).
+    Two ratio-tensor modes:
+
+    * ``r=None`` (carried-r) — the policy declares ``wants_r = True`` and
+      reads the ratio tensor in force *this slot* from its aux,
+      ``aux = (data_dist, omega_t * pue_t, r_t)``: the engines slice a
+      time-varying ``(T, K, N, N)`` trace per slot, and the placement
+      controller hands the carried ``r_c``/``r_e`` its epoch rebuilds and
+      recovery re-placements actually produced. This is the only mode the
+      controller accepts.
+    * explicit ``(K, N, N)`` ``r`` — statically bound, as before. The
+      policy is marked ``static_r = True`` and the engines raise loudly
+      if a time-varying ratio trace reaches it (the kernel would silently
+      dispatch on stale ratios).
+
+    Either way the policy declares ``wants_wpue = True``, so
+    :func:`repro.core.simulator.simulate` hands it raw per-slot prices —
+    this is what lets an N = 256 ``configs.fleet_256`` run complete
+    end-to-end through the kernel (interpret mode on CPU/CI, compiled on
+    TPU; ``impl="ref"`` selects the pure-jnp oracle instead — the
+    fallback when Pallas is unavailable).
     """
-    r = jnp.asarray(r, jnp.float32)
+    if r is not None:
+        r = jnp.asarray(r, jnp.float32)
 
     def policy(key, q, arrivals, mu, e, aux, scalar):
         del key, e
-        _, wpue = aux
+        if r is None:
+            _, wpue, r_t = aux
+        else:
+            wpue, r_t = aux[1], r
         return gmsa_dispatch(
             q, arrivals, mu, None, scalar,
-            impl=impl, r=r, wpue=wpue, p_it=p_it, interpret=interpret,
+            impl=impl, r=r_t, wpue=wpue, p_it=p_it, interpret=interpret,
         )
 
     policy.consumes_key = False
     policy.wants_wpue = True
+    policy.wants_r = r is None
+    policy.static_r = r is not None
     return policy

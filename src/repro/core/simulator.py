@@ -28,6 +28,16 @@ Policies that declare ``wants_wpue = True`` receive ``aux = (data_dist,
 omega_t * pue_t)`` instead of the bare distribution — the hook the fused
 Pallas dispatch path (:func:`repro.core.gmsa.make_kernel_policy`) uses to
 see raw per-slot prices; the product is hoisted out of the scan body.
+Policies that additionally declare ``wants_r = True`` get the per-slot
+ratio tensor appended — ``aux = (data_dist, wpue_t, r_t)`` — so the kernel
+dispatch path sees time-varying ``(T, K, N, N)`` ratio traces instead of a
+stale static binding; a policy marked ``static_r = True`` fed a
+time-varying trace raises instead of silently dispatching on stale ratios.
+
+Monte-Carlo replication shards across devices when ``simulate_many`` is
+given a ``mesh`` (:func:`repro.distributed.mesh.runs_mesh`): the runs axis
+partitions over the mesh with ``shard_map``, bitwise-identical to the
+single-device vmap at every device count.
 """
 
 from __future__ import annotations
@@ -185,24 +195,44 @@ def simulate(
     scalar = jnp.asarray(scalar, jnp.float32)
 
     dd_varying = inputs.data_dist.ndim == 3                        # (T, K, N)
+    r_varying = inputs.r.ndim == 4                              # (T, K, N, N)
     uses_key = getattr(policy, "consumes_key", True)
     wants_wpue = getattr(policy, "wants_wpue", False)
+    wants_r = getattr(policy, "wants_r", False)
+    if r_varying and getattr(policy, "static_r", False):
+        raise ValueError(
+            "policy binds a static (K, N, N) ratio tensor but inputs.r is "
+            "time-varying (T, K, N, N) — the kernel would silently dispatch "
+            "on stale ratios. Build it with make_kernel_policy(r=None) so "
+            "the per-slot r reaches the kernel through the policy aux."
+        )
+    if wants_r and not wants_wpue:
+        raise ValueError(
+            "wants_r policies must also declare wants_wpue: the aux "
+            "contract is (data_dist, wpue_t, r_t)"
+        )
     wpue_all = inputs.omega * inputs.pue if wants_wpue else None
 
     f_all = None
     if getattr(policy, "state_independent", False):
         keys = jax.random.split(key, t_slots)
 
-        def call(kk, a, m, e, d, w):
-            return policy(kk, q0, a, m, e, (d, w) if wants_wpue else d,
-                          scalar)
+        def call(kk, a, m, e, d, w, rr):
+            aux = d
+            if wants_wpue:
+                aux = (aux, w)
+            if wants_r:
+                aux = aux + (rr,)
+            return policy(kk, q0, a, m, e, aux, scalar)
 
         f_all = jax.vmap(
             call,
             in_axes=(0, 0, 0, 0, 0 if dd_varying else None,
-                     0 if wants_wpue else None),
+                     0 if wants_wpue else None,
+                     0 if r_varying else None),
         )(keys, inputs.arrivals, inputs.mu, e_cost_all,
-          inputs.data_dist, wpue_all)                              # (T, N, K)
+          inputs.data_dist, wpue_all,
+          inputs.r if wants_r else None)                           # (T, N, K)
 
     # The PRNG key rides in the scan carry ONLY when the policy actually
     # consumes it — for key-ignoring policies the per-slot threefry split
@@ -212,6 +242,8 @@ def simulate(
 
     def slot(carry, xs):
         q, key = carry if keyed else (carry, None)
+        if wants_r and r_varying:
+            xs, r_t = xs[:-1], xs[-1]
         if wants_wpue:
             xs, wpue_t = xs[:-1], xs[-1]
         if dd_varying:
@@ -220,6 +252,8 @@ def simulate(
             aux = inputs.data_dist
         if wants_wpue:
             aux = (aux, wpue_t)
+        if wants_r:
+            aux = aux + ((r_t if r_varying else inputs.r),)
         if f_all is None:
             arrivals, mu, e_cost, e_raw = xs
             if keyed:
@@ -241,6 +275,8 @@ def simulate(
         xs = xs + (inputs.data_dist,)
     if wants_wpue:
         xs = xs + (wpue_all,)
+    if wants_r and r_varying:
+        xs = xs + (inputs.r,)
     carry0 = (q0, key) if keyed else q0
     final_carry, scan_outs = jax.lax.scan(slot, carry0, xs)
     if tel_on:
@@ -267,7 +303,8 @@ def simulate(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("policy", "build_inputs", "n_runs", "telemetry")
+    jax.jit,
+    static_argnames=("policy", "build_inputs", "n_runs", "telemetry", "mesh"),
 )
 def simulate_many(
     build_inputs: Callable[[Array], SimInputs],
@@ -277,6 +314,7 @@ def simulate_many(
     scalar: float | Array = 0.0,
     telemetry: TelemetryConfig | None = None,
     health: Array | None = None,
+    mesh=None,
 ) -> SimOutputs:
     """Monte-Carlo replication: fresh traces + fresh policy randomness per run.
 
@@ -285,6 +323,12 @@ def simulate_many(
     PUE, ratios — and the degraded-mode ``health`` factor, when given)
     are closed over and shared. Outputs are stacked on a leading
     (n_runs,) axis (telemetry frames too, when enabled).
+
+    ``mesh`` (static) shards the runs axis over a host-device mesh built by
+    :func:`repro.distributed.mesh.runs_mesh` — same split keys, same
+    per-run streams, bitwise-identical outputs at every device count;
+    non-divisible ``n_runs`` is padded and sliced, never truncated.
+    ``None`` keeps the single-device vmap.
     """
     keys = jax.random.split(key, n_runs)
 
@@ -293,7 +337,11 @@ def simulate_many(
         return simulate(build_inputs(k_build), policy, k_sim, scalar,
                         telemetry, health)
 
-    return jax.vmap(one)(keys)
+    if mesh is None:
+        return jax.vmap(one)(keys)
+    from repro.distributed.mesh import sharded_runs
+
+    return sharded_runs(one, keys, mesh)
 
 
 def summarize(outs: SimOutputs) -> dict:

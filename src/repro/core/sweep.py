@@ -54,7 +54,7 @@ def simulate_sweep(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("build_inputs", "policy", "n_runs")
+    jax.jit, static_argnames=("build_inputs", "policy", "n_runs", "mesh")
 )
 def sweep_grid(
     build_inputs: Callable[[Array], SimInputs],
@@ -62,6 +62,7 @@ def sweep_grid(
     key: Array,
     n_runs: int,
     scalars: Array,
+    mesh=None,
 ) -> SimOutputs:
     """A full Monte-Carlo sweep at every scalar — one compilation, one launch.
 
@@ -70,16 +71,35 @@ def sweep_grid(
     shared across lanes, exactly like calling ``simulate_many`` per point
     with a fixed key), so the V-axis comparison is paired, not just
     distributionally matched. Outputs: leading ``(len(scalars), n_runs)``.
+
+    ``mesh`` (static) shards the *runs* axis over a host-device mesh
+    (:func:`repro.distributed.mesh.runs_mesh`): the scalar vmap moves
+    inside the per-run function (each run builds its traces once, shared
+    across all scalar lanes) and the output axes are swapped back to the
+    leading ``(len(scalars), n_runs)`` contract.
     """
     scalars = jnp.asarray(scalars, jnp.float32)
-    return jax.vmap(
-        lambda v: simulate_many(build_inputs, policy, key, n_runs, v)
-    )(scalars)
+    if mesh is None:
+        return jax.vmap(
+            lambda v: simulate_many(build_inputs, policy, key, n_runs, v)
+        )(scalars)
+    from repro.distributed.mesh import sharded_runs
+
+    keys = jax.random.split(key, n_runs)
+
+    def one(run_key):
+        k_build, k_sim = jax.random.split(run_key)
+        inp = build_inputs(k_build)
+        return jax.vmap(lambda v: simulate(inp, policy, k_sim, v))(scalars)
+
+    outs = sharded_runs(one, keys, mesh)        # leading (n_runs, n_points)
+    return jax.tree_util.tree_map(lambda x: jnp.swapaxes(x, 0, 1), outs)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("build_inputs", "policy", "rule", "cfg", "n_runs"),
+    static_argnames=("build_inputs", "policy", "rule", "cfg", "n_runs",
+                     "mesh"),
 )
 def sweep_placed_budgets(
     build_inputs: Callable[[Array], SimInputs],
@@ -95,6 +115,7 @@ def sweep_placed_budgets(
     ingest: Array | None = None,
     sizes_gb: Array | None = None,
     alive: Array | None = None,
+    mesh=None,
 ):
     """One-launch move-budget sweep of the two-timescale controller.
 
@@ -103,14 +124,35 @@ def sweep_placed_budgets(
     ``placement_bench --sweep`` column (all move budgets at one W) runs as
     ONE launch via the controller's traced ``move_budget`` override.
     Outputs: ``PlacedOutputs`` with leading ``(len(budgets), n_runs)``.
+
+    ``mesh`` (static) shards the runs axis, mirroring :func:`sweep_grid`:
+    the budget vmap moves inside the per-run function and the leading two
+    output axes are swapped back to ``(len(budgets), n_runs)``.
     """
-    from repro.placement.controller import simulate_placed_many
+    from repro.placement.controller import simulate_placed, simulate_placed_many
 
     budgets = jnp.asarray(budgets, jnp.float32)
-    return jax.vmap(
-        lambda b: simulate_placed_many(
-            build_inputs, up, down, policy, rule, key, n_runs, cfg,
-            scalar=scalar, ingest=ingest, sizes_gb=sizes_gb, alive=alive,
-            move_budget=b,
-        )
-    )(budgets)
+    if mesh is None:
+        return jax.vmap(
+            lambda b: simulate_placed_many(
+                build_inputs, up, down, policy, rule, key, n_runs, cfg,
+                scalar=scalar, ingest=ingest, sizes_gb=sizes_gb, alive=alive,
+                move_budget=b,
+            )
+        )(budgets)
+    from repro.distributed.mesh import sharded_runs
+
+    keys = jax.random.split(key, n_runs)
+
+    def one(run_key):
+        k_build, k_sim = jax.random.split(run_key)
+        inp = build_inputs(k_build)
+        return jax.vmap(
+            lambda b: simulate_placed(
+                inp, up, down, policy, rule, k_sim, cfg, scalar=scalar,
+                ingest=ingest, sizes_gb=sizes_gb, alive=alive, move_budget=b,
+            )
+        )(budgets)
+
+    outs = sharded_runs(one, keys, mesh)        # leading (n_runs, n_budgets)
+    return jax.tree_util.tree_map(lambda x: jnp.swapaxes(x, 0, 1), outs)

@@ -332,6 +332,15 @@ def simulate_staged(
     returns_flow = getattr(pol, "returns_flow", False)
     returns_hedge = getattr(pol, "returns_hedge", False)
     dd_varying = inputs.data_dist.ndim == 3                        # (T, K, N)
+    r_varying = inputs.r.ndim == 4                              # (T, K, N, N)
+    wants_r = getattr(pol, "wants_r", False)
+    if r_varying and getattr(pol, "static_r", False):
+        raise ValueError(
+            "policy binds a static (K, N, N) ratio tensor but inputs.r is "
+            "time-varying (T, K, N, N) — the kernel would silently dispatch "
+            "on stale ratios. Build it with make_kernel_policy(r=None) so "
+            "the per-slot r reaches the kernel through the policy aux."
+        )
 
     if returns_flow and getattr(pol, "state_independent", False):
         raise ValueError(
@@ -343,23 +352,27 @@ def simulate_staged(
     f_all = None
     if getattr(pol, "state_independent", False):
         keys = jax.random.split(key, t_slots)
-        if dd_varying:
-            f_all = jax.vmap(
-                lambda kk, a, m, e, d, w: pol(kk, q0, a, m, e, (d, w), scalar)
-            )(keys, inputs.arrivals, inputs.mu, e_cost_all,
-              inputs.data_dist, wpue_all)
-        else:
-            f_all = jax.vmap(
-                lambda kk, a, m, e, w: pol(
-                    kk, q0, a, m, e, (inputs.data_dist, w), scalar
-                )
-            )(keys, inputs.arrivals, inputs.mu, e_cost_all, wpue_all)
+
+        def call(kk, a, m, e, d, w, rr):
+            aux = (d, w)
+            if wants_r:
+                aux = aux + (rr,)
+            return pol(kk, q0, a, m, e, aux, scalar)
+
+        f_all = jax.vmap(
+            call,
+            in_axes=(0, 0, 0, 0, 0 if dd_varying else None, 0,
+                     0 if r_varying else None),
+        )(keys, inputs.arrivals, inputs.mu, e_cost_all,
+          inputs.data_dist, wpue_all, inputs.r if wants_r else None)
 
     keyed = f_all is None and uses_key
     key0 = key   # for key-ignoring policies (signature filler, never used)
 
     def slot(carry, xs):
         q, key = carry if keyed else (carry, None)
+        if wants_r and r_varying:
+            xs, r_t = xs[:-1], xs[-1]
         if dd_varying:
             xs, dd_t = xs[:-1], xs[-1]
         else:
@@ -371,7 +384,10 @@ def simulate_staged(
                 key, sub = jax.random.split(key)
             else:
                 sub = key0   # key-ignoring policy: no per-slot split
-            ret = pol(sub, q, arrivals, mu, e_cost, (dd_t, wpue_t), scalar)
+            aux = (dd_t, wpue_t)
+            if wants_r:
+                aux = aux + ((r_t if r_varying else inputs.r),)
+            ret = pol(sub, q, arrivals, mu, e_cost, aux, scalar)
         else:
             (ret,) = rest
 
@@ -401,6 +417,8 @@ def simulate_staged(
         xs = xs + (f_all,)
     if dd_varying:
         xs = xs + (inputs.data_dist,)
+    if wants_r and r_varying:
+        xs = xs + (inputs.r,)
     carry0 = (q0, key) if keyed else q0
     final_carry, scan_outs = jax.lax.scan(slot, carry0, xs)
     if returns_hedge:
@@ -520,7 +538,8 @@ def simulate_staged(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("policy", "build_inputs", "n_runs", "telemetry")
+    jax.jit,
+    static_argnames=("policy", "build_inputs", "n_runs", "telemetry", "mesh"),
 )
 def simulate_staged_many(
     build_inputs: Callable[[Array], SimInputs],
@@ -533,6 +552,7 @@ def simulate_staged_many(
     telemetry: TelemetryConfig | None = None,
     health: Array | None = None,
     link_health: Array | None = None,
+    mesh=None,
 ) -> StagedOutputs:
     """Monte-Carlo replication of :func:`simulate_staged` (vmap over keys).
 
@@ -541,6 +561,10 @@ def simulate_staged_many(
     and the degraded-mode health/link traces, when given) shared. One
     compilation serves every run; telemetry frames (when enabled) stack
     on the leading runs axis like every other output.
+
+    ``mesh`` (static) shards the runs axis over a host-device mesh
+    (:func:`repro.distributed.mesh.runs_mesh`) — same split keys, bitwise
+    the single-device outputs at every device count.
     """
     keys = jax.random.split(key, n_runs)
 
@@ -551,7 +575,11 @@ def simulate_staged_many(
             telemetry, health, link_health,
         )
 
-    return jax.vmap(one)(keys)
+    if mesh is None:
+        return jax.vmap(one)(keys)
+    from repro.distributed.mesh import sharded_runs
+
+    return sharded_runs(one, keys, mesh)
 
 
 def summarize_staged(outs: StagedOutputs) -> dict:

@@ -276,16 +276,25 @@ def stage_oblivious(policy, pin_map: bool = False):
             ``(data_dist, omega*PUE)`` aux pair, exactly as
             :func:`repro.core.simulator.simulate` hands it to them — the
             staged engines always carry ``wpue``, so the fleet-scale kernel
-            path composes with stage-structured queues unchanged.
+            path composes with stage-structured queues unchanged. Policies
+            additionally declaring ``wants_r = True`` (the carried-r kernel
+            variant) get the engine's ``(data_dist, wpue, r_t)`` triple
+            passed through verbatim.
         pin_map: override stage 0 with data-local map placement (used when
             benchmarking against stage-aware policies under the same
             data-local-map premise; keep False for exact base semantics).
     """
     wants_wpue = getattr(policy, "wants_wpue", False)
+    wants_r = getattr(policy, "wants_r", False)
 
     def staged(key, q, arrivals, mu, e, aux, scalar):
-        data_dist, wpue = aux
-        base_aux = (data_dist, wpue) if wants_wpue else data_dist
+        data_dist = aux[0]
+        if wants_r:
+            base_aux = aux                 # (data_dist, wpue, r_t) verbatim
+        elif wants_wpue:
+            base_aux = (data_dist, aux[1])
+        else:
+            base_aux = data_dist
         q_total = jnp.sum(q, axis=-1)                              # (N, K)
         f_base = policy(key, q_total, arrivals, mu, e, base_aux, scalar)
         f = jnp.broadcast_to(f_base[:, :, None], q.shape)
@@ -298,4 +307,6 @@ def stage_oblivious(policy, pin_map: bool = False):
     staged.staged = True
     staged.state_independent = getattr(policy, "state_independent", False)
     staged.consumes_key = getattr(policy, "consumes_key", True)
+    staged.wants_r = wants_r
+    staged.static_r = getattr(policy, "static_r", False)
     return staged

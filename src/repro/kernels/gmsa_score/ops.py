@@ -37,9 +37,18 @@ def gmsa_score(
     r: Array,        # (K, N, N) task-allocation ratios
     wpue: Array,     # (N,)   omega ⊙ PUE
     *,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> tuple[Array, Array]:
-    """Fused dispatch scores + argmin. Returns (scores (K, N), best (K,))."""
+    """Fused dispatch scores + argmin. Returns (scores (K, N), best (K,)).
+
+    ``interpret=None`` resolves per backend
+    (:func:`repro.kernels.default_interpret`): compiled on TPU, interpret
+    elsewhere.
+    """
+    if interpret is None:
+        from repro.kernels import default_interpret
+
+        interpret = default_interpret()
     k_dim, n_dim = q.shape
     qp = _pad_to(_pad_to(q.astype(jnp.float32), 1, N_T, _BIG), 0, K_T)
     mup = _pad_to(_pad_to(mu.astype(jnp.float32), 1, N_T), 0, K_T)

@@ -20,13 +20,19 @@ def ssd_scan(
     c_mat: Array,  # (B, S, N)
     *,
     chunk: int = 128,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> tuple[Array, Array]:
     """Chunked SSD forward. Returns (y (B,S,H,P), final_state (B,H,P,N)).
 
     Sequence length is padded to a chunk multiple with dt=0 steps (exp(0)=1,
-    zero update — exact no-ops for the recurrence).
+    zero update — exact no-ops for the recurrence). ``interpret=None``
+    resolves per backend (:func:`repro.kernels.default_interpret`):
+    compiled on TPU, interpret elsewhere.
     """
+    if interpret is None:
+        from repro.kernels import default_interpret
+
+        interpret = default_interpret()
     bsz, s, h, p = x.shape
     pad = (-s) % chunk
     if pad:

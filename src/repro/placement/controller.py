@@ -56,6 +56,7 @@ from repro.core.simulator import (
     energy_tables,
     slot_step,
 )
+from repro.placement.replica import replica_read_assignment
 from repro.placement.replica import sync_cost as replica_sync_cost
 from repro.telemetry.config import TelemetryConfig
 from repro.telemetry.config import enabled as _tel_enabled
@@ -161,6 +162,14 @@ class PlacementConfig:
         io_compute_seconds / io_job_gb: the slowdown model's per-job
             compute time and intermediate pull volume (defaults match
             ``io_slowdown_from_bandwidth``).
+        io_per_reader: resolve the I/O slowdown from the *actual*
+            per-reader replica choices
+            (:func:`repro.placement.replica.replica_read_assignment`)
+            instead of the type-averaged locality: a (site, type) pair
+            whose reader holds a live local replica is not slowed at all,
+            whatever the other types pull remotely — the slowdown becomes
+            (N, K) and scales mu per type. Off by default: the averaged
+            (N,) model (and its bitwise path) is untouched.
         size / manager_share / map_share: Iridium rebuild parameters.
             Defaults equal ``build_task_allocation``'s, so default-built
             ``SimInputs.r`` and the per-epoch rebuilds agree; when the
@@ -179,6 +188,7 @@ class PlacementConfig:
     io_coupling: bool = False
     io_compute_seconds: float = 300.0
     io_job_gb: float = 5.0
+    io_per_reader: bool = False
     size: float = 1.0
     manager_share: float = 0.3
     map_share: float = 0.6
@@ -400,17 +410,43 @@ def simulate_placed(
     # as ``simulate`` skips it.
     state_ind = getattr(policy, "state_independent", False)
     uses_key = getattr(policy, "consumes_key", True)
+    wants_wpue = getattr(policy, "wants_wpue", False)
+    wants_r = getattr(policy, "wants_r", False)
+    if getattr(policy, "static_r", False):
+        raise ValueError(
+            "the controller re-derives r at every epoch boundary (and "
+            "recovery edge) — a policy binding a static ratio tensor would "
+            "dispatch on stale ratios; build it with "
+            "make_kernel_policy(r=None) so the carried r reaches the kernel."
+        )
     keys_ep = ep(jax.random.split(key, t_slots)) if state_ind else None
 
     q0 = jnp.zeros((n, k_types), jnp.float32)
     d0 = jnp.asarray(inputs.data_dist, jnp.float32)
     r0 = inputs.r
     if cfg.io_coupling:
+        if cfg.io_per_reader:
+            ones_n = jnp.ones((n,), jnp.float32)
+
+            def io_slow(d):
+                # The read pattern's diagonal (local vs remote) is price-
+                # invariant — local reads are free — so a constant wpue
+                # yields the actual per-reader local/remote choices.
+                reads = replica_read_assignment(d, wan, ones_n)
+                return io_slowdown_from_bandwidth(
+                    up, down, d, cfg.io_compute_seconds, cfg.io_job_gb,
+                    reads=reads,
+                )                                                    # (N, K)
+        else:
+
+            def io_slow(d):
+                return io_slowdown_from_bandwidth(
+                    up, down, d, cfg.io_compute_seconds, cfg.io_job_gb
+                )                                                    # (N,)
+
         # The mu trace is calibrated against the epoch-0 layout; the
         # coupling rescales it by the current layout's I/O slowdown.
-        slow0 = io_slowdown_from_bandwidth(
-            up, down, d0, cfg.io_compute_seconds, cfg.io_job_gb
-        )
+        slow0 = io_slow(d0)
 
     def epoch(carry, xs):
         if tel_trace:
@@ -458,10 +494,10 @@ def simulate_placed(
         if cfg.io_coupling:
             # The rule observes service under the *drifted* layout (its
             # decision input); the realized scale below follows its choice.
-            scale_obs = io_slowdown_from_bandwidth(
-                up, down, d_drift, cfg.io_compute_seconds, cfg.io_job_gb
-            ) / slow0
-            mu_bar = jnp.mean(mu_e, axis=0) * scale_obs[:, None]
+            scale_obs = io_slow(d_drift) / slow0
+            if not cfg.io_per_reader:
+                scale_obs = scale_obs[:, None]
+            mu_bar = jnp.mean(mu_e, axis=0) * scale_obs
         else:
             mu_bar = jnp.mean(mu_e, axis=0)
         if faulty:
@@ -531,11 +567,14 @@ def simulate_placed(
                      jnp.float32(n) - jnp.sum(alive_b)),
                 )
         if cfg.io_coupling:
-            scale_e = io_slowdown_from_bandwidth(
-                up, down, d_new, cfg.io_compute_seconds, cfg.io_job_gb
-            ) / slow0                                                 # (N,)
+            scale_full = io_slow(d_new) / slow0             # (N,) or (N, K)
             mu_e_raw = mu_e          # pre-scale rows: the fault path re-
-            mu_e = mu_e * scale_e[None, :, None]   # derives from these
+            if cfg.io_per_reader:    # derives from these
+                mu_e = mu_e * scale_full[None]
+                scale_e = jnp.mean(scale_full, axis=-1)  # (N,) audit column
+            else:
+                mu_e = mu_e * scale_full[None, :, None]
+                scale_e = scale_full
         else:
             scale_e = jnp.ones((n,), jnp.float32)
         r_e = jnp.where(is_first, r0, rebuild(d_new))                 # (K, N, N)
@@ -563,6 +602,8 @@ def simulate_placed(
                 key2, sub = jax.random.split(key2)
             else:
                 sub = key2   # key-ignoring policy: no per-slot split
+            if wants_wpue and not faulty:
+                wpue_t, rest2 = rest2[0], rest2[1:]
             aux = d_new
             if faulty:
                 if tel_trace:
@@ -684,16 +725,24 @@ def simulate_placed(
                     # Re-derive this slot's scale from the carried layout
                     # (cond-gated like ec/er: no fault so far, no extra
                     # work; fired=False is the exact identity).
+                    def _io_rescale(dc):
+                        s = io_slow(dc) / slow0
+                        if not cfg.io_per_reader:
+                            s = s[:, None]
+                        return mu_raw_t * s * alive_t[:, None]
+
                     mu = jax.lax.cond(
-                        fired,
-                        lambda dc: mu_raw_t * (io_slowdown_from_bandwidth(
-                            up, down, dc,
-                            cfg.io_compute_seconds, cfg.io_job_gb,
-                        ) / slow0)[:, None] * alive_t[:, None],
-                        lambda dc: mu,
-                        d_c,
+                        fired, _io_rescale, lambda dc: mu, d_c
                     )
                 aux = d_c
+            if wants_wpue:
+                # The kernel-dispatch aux contract: raw per-slot prices,
+                # and (wants_r) the ratio tensor actually in force — the
+                # carried r_c on the fault path (recovery re-places mid-
+                # epoch), the epoch rebuild r_e otherwise.
+                aux = (aux, wpue_t)
+            if wants_r:
+                aux = aux + ((r_c if faulty else r_e),)
             f = policy(sub, q2, arrivals, mu, ec, aux, scalar)
             if faulty:
                 # No dispatch mass to dead sites, whatever the policy says.
@@ -724,6 +773,8 @@ def simulate_placed(
         slot_xs = (arr_e, mu_e, e_cost, e_raw)
         if state_ind:
             slot_xs = slot_xs + (keys_e,)
+        if wants_wpue and not faulty:
+            slot_xs = slot_xs + (wpue_e,)
         if faulty:
             slot_xs = slot_xs + (alive_e, alive_prev_e, om_e, pu_e)
             if linky:
@@ -809,7 +860,7 @@ def simulate_placed(
 @functools.partial(
     jax.jit,
     static_argnames=("build_inputs", "policy", "rule", "cfg", "n_runs",
-                     "telemetry"),
+                     "telemetry", "mesh"),
 )
 def simulate_placed_many(
     build_inputs: Callable[[Array], SimInputs],
@@ -829,6 +880,7 @@ def simulate_placed_many(
     health: Array | None = None,
     link_health: Array | None = None,
     regions: Array | None = None,
+    mesh=None,
 ) -> PlacedOutputs:
     """Monte-Carlo replication of :func:`simulate_placed` (vmap over keys).
 
@@ -838,6 +890,10 @@ def simulate_placed_many(
     every run. With telemetry enabled the frames stack on the runs axis
     like everything else — decode one run's lane with
     :func:`repro.telemetry.collect.collect_records`.
+
+    ``mesh`` (static) shards the runs axis over a host-device mesh
+    (:func:`repro.distributed.mesh.runs_mesh`) — same split keys, bitwise
+    the single-device outputs at every device count.
     """
     keys = jax.random.split(key, n_runs)
 
@@ -850,7 +906,11 @@ def simulate_placed_many(
             link_health=link_health, regions=regions,
         )
 
-    return jax.vmap(one)(keys)
+    if mesh is None:
+        return jax.vmap(one)(keys)
+    from repro.distributed.mesh import sharded_runs
+
+    return sharded_runs(one, keys, mesh)
 
 
 def summarize_placed(outs: PlacedOutputs) -> dict:

@@ -76,16 +76,31 @@ def service_rate_trace(
 
 def io_slowdown_from_bandwidth(
     up: Array, down: Array, data_dist: Array, compute_seconds: float = 300.0,
-    job_gb: float = JOB_INTERMEDIATE_GB,
+    job_gb: float = JOB_INTERMEDIATE_GB, reads: Array | None = None,
 ) -> Array:
-    """(N,) effective-rate multiplier from network I/O.
+    """Effective-rate multiplier from network I/O — (N,) or (N, K).
 
     A DC managing a job pulls the non-local share of the *intermediate*
     (shuffle) data through its downlink; the slowdown is
-    compute/(compute + transfer). ``data_dist`` is averaged over types for a
-    per-DC locality estimate. The input data itself never moves (the GDA
-    premise — map tasks are data-local).
+    compute/(compute + transfer). The input data itself never moves (the
+    GDA premise — map tasks are data-local).
+
+    With ``reads=None`` (default), ``data_dist`` is averaged over types for
+    a per-DC locality estimate: every job type at a site shares one (N,)
+    slowdown, even types whose data sits entirely local. Passing the
+    (K, N, N) per-reader replica selection from
+    :func:`repro.placement.replica.replica_read_assignment` resolves the
+    pull per (site, type) instead: reader j's type-k jobs transfer nothing
+    when its chosen replica is itself (``reads[k, j, j] == 1``) and pull
+    the full intermediate volume otherwise — returned as an (N, K)
+    multiplier, so a type pinned to a local replica is not slowed by other
+    types' remote reads.
     """
+    if reads is not None:
+        local = jnp.diagonal(reads, axis1=1, axis2=2)              # (K, N)
+        remote_gb = job_gb * (1.0 - local)
+        transfer_s = remote_gb * 8.0 / jnp.maximum(down[None, :], 1e-6)
+        return (compute_seconds / (compute_seconds + transfer_s)).T  # (N, K)
     locality = jnp.mean(data_dist, axis=0)                         # (N,)
     remote_gb = job_gb * (1.0 - locality)
     transfer_s = remote_gb * 8.0 / jnp.maximum(down, 1e-6)         # Gb / Gbps
